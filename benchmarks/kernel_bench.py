@@ -1,0 +1,68 @@
+"""Kernel micro-benchmarks: us_per_call of each Pallas kernel (interpret mode
+on CPU — correctness-path timing, NOT TPU performance) vs its jnp oracle."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    def t(*s, dtype=jnp.float32, scale=1.0):
+        return jnp.asarray(rng.normal(size=s) * scale, dtype)
+
+    rows = []
+
+    from repro.kernels.attention import ops as aops, ref as aref
+
+    q, k, v = t(2, 128, 4, 64), t(2, 128, 2, 64), t(2, 128, 2, 64)
+    rows.append(("attention_pallas_interp",
+                 _time(lambda *a: aops.flash_attention(*a, causal=True), q, k, v),
+                 "B2xS128xH4xD64"))
+    rows.append(("attention_ref",
+                 _time(lambda *a: aref.attention(*a, causal=True), q, k, v), ""))
+
+    from repro.kernels.ssd import ops as sops, ref as sref
+
+    x, dA = t(2, 128, 4, 32, scale=0.5), -jnp.abs(t(2, 128, 4, scale=0.1))
+    B_, C_ = t(2, 128, 4, 32, scale=0.3), t(2, 128, 4, 32, scale=0.3)
+    rows.append(("ssd_pallas_interp",
+                 _time(lambda *a: sops.ssd(*a, chunk=32), x, dA, B_, C_),
+                 "B2xS128xH4xP32xN32"))
+    rows.append(("ssd_ref", _time(sref.ssd, x, dA, B_, C_), ""))
+
+    from repro.kernels.rglru import ops as rops, ref as rref
+
+    a = jnp.clip(jnp.abs(t(2, 256, 128, scale=0.3)), 0, 0.95)
+    b = t(2, 256, 128, scale=0.5)
+    rows.append(("rglru_pallas_interp", _time(rops.rglru, a, b), "B2xS256xW128"))
+    rows.append(("rglru_ref", _time(rref.rglru, a, b), ""))
+
+    from repro.kernels.moe import ops as mops, ref as mref
+
+    xg = t(8, 64, 64, scale=0.4)
+    p = {"w_gate": t(8, 64, 128, scale=0.1), "w_up": t(8, 64, 128, scale=0.1),
+         "w_down": t(8, 128, 64, scale=0.1)}
+    rows.append(("moe_ffn_pallas_interp", _time(mops.moe_ffn, xg, p),
+                 "E8xC64xD64xF128"))
+    rows.append(("moe_ffn_ref", _time(mref.moe_ffn, xg, p), ""))
+
+    from repro.kernels.conv1d import ops as cops, ref as cref
+
+    xc, wc = t(2, 512, 128), t(4, 128, scale=0.4)
+    rows.append(("conv1d_cgra_interp", _time(cops.conv1d, xc, wc), "B2xS512xD128"))
+    rows.append(("conv1d_ref", _time(cref.conv1d, xc, wc), ""))
+    return rows

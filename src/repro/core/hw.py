@@ -1,0 +1,62 @@
+"""Hardware constants for roofline analysis.
+
+Two hardware models live here:
+
+* TPU v5e — the TARGET of this framework (the dry-run meshes, the roofline).
+* TSMC 65 nm LP silicon — the paper's measured HEEPocrates chip, used by the
+  calibrated energy model in :mod:`repro.core.energy`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """Per-chip roofline terms (all per second)."""
+
+    name: str
+    peak_flops_bf16: float  # FLOP/s
+    hbm_bandwidth: float    # bytes/s
+    ici_bandwidth: float    # bytes/s per link
+    hbm_bytes: int          # capacity
+    vmem_bytes: int         # on-chip vector memory
+    mxu_dim: int = 128      # systolic array tile edge
+
+
+# Constants fixed by the brief: 197 TFLOP/s bf16; 819 GB/s HBM; ~50 GB/s/link ICI.
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bandwidth=819e9,
+    ici_bandwidth=50e9,
+    hbm_bytes=16 * 1024**3,
+    vmem_bytes=128 * 1024**2,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatingPoint:
+    """A (voltage, frequency) DVFS point of the HEEPocrates silicon."""
+
+    voltage: float   # volts
+    freq_hz: float   # hertz
+
+
+# Measured silicon envelope (paper §IV-C): 0.8 V/170 MHz ... 1.2 V/470 MHz,
+# down to the 32 kHz always-on clock.
+HEEPOCRATES_POINTS = {
+    "sleep_32khz_0v8": OperatingPoint(0.8, 32e3),
+    "acquisition_1mhz_0v8": OperatingPoint(0.8, 1e6),
+    "processing_170mhz_0v8": OperatingPoint(0.8, 170e6),
+    "max_470mhz_1v2": OperatingPoint(1.2, 470e6),
+    "cgra_60mhz_0v8": OperatingPoint(0.8, 60e6),
+}
+
+
+def bytes_of(shape, dtype_bytes: int) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n * dtype_bytes

@@ -1,0 +1,110 @@
+"""The X-HEEP platform object: configuration + dispatch + power.
+
+Mirrors the paper's configurability axes (§III-A):
+
+* ``core``        — CV32E20 / CV32E40X / CV32E40P, i.e. which execution
+                    backend compute ops default to (ref / chunked / pallas).
+* ``bus``         — one_at_a_time vs fully_connected -> sharding rule preset.
+* ``addressing``  — contiguous vs interleaved -> activation layout (sequence
+                    parallelism on/off).
+* ``n_banks``     — memory pool shard count (per-pod HBM partitions).
+* ``peripherals`` — optional subsystems (data pipeline stages, loggers).
+
+An accelerator registered through XAIF can override the backend for its op,
+and its power domain joins the platform power manager.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+from jax.sharding import Mesh
+
+from repro.core import xaif
+from repro.core.power import PowerDomain, PowerManager
+from repro.sharding import axes as lax_
+from repro.sharding import rules as rules_lib
+
+CORE_BACKEND = {
+    "cv32e20": "ref",       # control-oriented core -> reference jnp path
+    "cv32e40x": "chunked",  # XIF co-processor socket -> chunked/scan formulations
+    "cv32e40p": "pallas",   # processing-oriented -> TPU kernels
+}
+
+BUSES = ("one_at_a_time", "fully_connected")
+ADDRESSING = ("contiguous", "interleaved")
+DEFAULT_PERIPHERALS = ("uart", "spi", "gpio", "timer", "dma", "plic")
+
+
+@dataclasses.dataclass(frozen=True)
+class XHeepConfig:
+    core: str = "cv32e40x"
+    bus: str = "fully_connected"
+    addressing: str = "contiguous"
+    n_banks: int = 8
+    peripherals: Sequence[str] = DEFAULT_PERIPHERALS
+    # op -> impl overrides (accelerator plug-ins chosen per op)
+    op_impls: Mapping[str, str] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.core not in CORE_BACKEND:
+            raise ValueError(f"unknown core {self.core!r}; options {list(CORE_BACKEND)}")
+        if self.bus not in BUSES:
+            raise ValueError(f"unknown bus {self.bus!r}")
+        if self.addressing not in ADDRESSING:
+            raise ValueError(f"unknown addressing {self.addressing!r}")
+        if self.n_banks < 1:
+            raise ValueError("need at least one memory bank")
+
+
+class Platform:
+    """A configured X-HEEP instance hosting models and accelerators."""
+
+    def __init__(self, config: XHeepConfig | None = None,
+                 registry: xaif.XaifRegistry | None = None):
+        self.config = config or XHeepConfig()
+        self.registry = registry or xaif.REGISTRY
+        self.power = PowerManager(
+            [PowerDomain("host", leak_uw=0.0)]
+            + [PowerDomain(f"bank{i}", leak_uw=0.0, retainable=True)
+               for i in range(self.config.n_banks)]
+        )
+        self._attached: list[xaif.AcceleratorSpec] = []
+
+    # -- XAIF attach ---------------------------------------------------------
+    def attach(self, spec: xaif.AcceleratorSpec) -> None:
+        """Plug an accelerator in: register fn + join the power manager."""
+        self.registry.register(spec, allow_override=True)
+        if spec.power_domain is not None:
+            if spec.power_domain.name not in self.power.domains:
+                self.power.add_domain(spec.power_domain)
+        self._attached.append(spec)
+
+    @property
+    def accelerators(self) -> list[xaif.AcceleratorSpec]:
+        return list(self._attached)
+
+    # -- dispatch -------------------------------------------------------------
+    def impl_for(self, op: str) -> str:
+        override = dict(self.config.op_impls or {}).get(op)
+        if override:
+            return override
+        default = CORE_BACKEND[self.config.core]
+        if default in self.registry.impls(op):
+            return default
+        return "ref"
+
+    def dispatch(self, op: str, *args, **kwargs):
+        return self.registry.dispatch(op, self.impl_for(op), *args, **kwargs)
+
+    # -- sharding rules (bus topology + addressing mode) ----------------------
+    def rules(self, mesh: Mesh) -> rules_lib.Rules:
+        preset = rules_lib.PRESETS[self.config.bus](mesh)
+        if self.config.addressing == "interleaved" and self.config.bus == "fully_connected":
+            # Interleaved addressing stripes sequences across banks for
+            # bandwidth (paper §III-A3) == sequence parallelism on activations.
+            preset = preset.override(
+                name=f"{preset.name}+interleaved", **{lax_.SEQ: ("data",)}
+            )
+        return preset

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels, registered as XAIF accelerators on import."""
+
+from repro.kernels.attention import ops as attention_ops
+from repro.kernels.conv1d import ops as conv1d_ops
+from repro.kernels.moe import ops as moe_ops
+from repro.kernels.rglru import ops as rglru_ops
+from repro.kernels.ssd import ops as ssd_ops
+
+__all__ = ["attention_ops", "conv1d_ops", "moe_ops", "rglru_ops", "ssd_ops"]

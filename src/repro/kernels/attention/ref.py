@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.layers import attention_ref
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              q_offset: int = 0, kv_len=None) -> jax.Array:
+    """q: (B,S,H,D); k/v: (B,S,K,D). Naive full-score softmax attention."""
+    return attention_ref(q, k, v, causal=causal, window=window,
+                         q_offset=q_offset, kv_len=kv_len)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the causal depthwise conv1d kernel."""
+
+from __future__ import annotations
+
+from repro.models.layers import causal_conv1d
+
+
+def conv1d(x, w, state=None):
+    """x (B,S,D), w (W,D). Returns y only (oracle for the kernel)."""
+    y, _ = causal_conv1d(x, w, state)
+    return y

@@ -1,0 +1,17 @@
+"""Pure-jnp oracles for the grouped-matmul / MoE FFN kernels."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import _expert_ffn
+
+
+def grouped_matmul(x, w):
+    """x: (E,C,D) @ w: (E,D,F) -> (E,C,F)."""
+    return jnp.einsum("ecd,edf->ecf", x, w)
+
+
+def moe_ffn(xg, p, kind: str = "swiglu"):
+    """Per-expert gated FFN on capacity-grouped tokens."""
+    return _expert_ffn(xg, p, kind)

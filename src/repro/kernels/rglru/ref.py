@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the RG-LRU kernel: sequential linear scan."""
+
+from __future__ import annotations
+
+from repro.models.griffin import linear_scan_ref
+
+
+def rglru(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t; a/b (B,S,W). Returns (ys, h_final)."""
+    return linear_scan_ref(a, b, h0)

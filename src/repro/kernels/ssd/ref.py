@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the SSD kernel: the sequential recurrence."""
+
+from __future__ import annotations
+
+from repro.models.mamba2 import ssd_ref
+
+
+def ssd(x, dA, B, C, *, init_state=None, chunk: int = 0):
+    """x (b,s,h,p) pre-scaled by dt; dA (b,s,h); B/C (b,s,h,n).
+    Returns (y, final_state). Sequential scan over time."""
+    return ssd_ref(x, dA, B, C, init_state=init_state, chunk=chunk)

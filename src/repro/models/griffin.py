@@ -1,0 +1,467 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427): RG-LRU + local attention.
+
+Layer pattern is (rec, rec, attn) repeating — 26 layers = 8 triples + a
+(rec, rec) tail. The RG-LRU linear recurrence has three backends:
+  * ``ref``     — sequential time scan (oracle);
+  * ``chunked`` — ``lax.associative_scan`` (log-depth parallel scan);
+  * ``pallas``  — fused block-scan kernel via XAIF (:mod:`repro.kernels.rglru`).
+
+Decode state is O(rnn_width) per recurrent layer + a 2048-token window cache
+per attention layer — context-length-independent, hence long_500k-eligible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.sharding import axes as lx
+from repro.sharding.params import Axes, ParamDecl
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def _block_linear(x, w):
+    """Block-diagonal linear: x (B,S,W), w (nb, bs, bs)."""
+    b, s, width = x.shape
+    nb, bs, _ = w.shape
+    xr = x.reshape(b, s, nb, bs)
+    return jnp.einsum("bsgi,gij->bsgj", xr, w).reshape(b, s, width)
+
+
+def rglru_gates(x, p, c: float):
+    """Returns (a, b_in): recurrence coefficient and gated input."""
+    r = jax.nn.sigmoid(_block_linear(x, p["w_r"].astype(x.dtype)).astype(F32)
+                       + p["b_r"].astype(F32))
+    i = jax.nn.sigmoid(_block_linear(x, p["w_i"].astype(x.dtype)).astype(F32)
+                       + p["b_i"].astype(F32))
+    log_a = -c * jax.nn.softplus(p["a_param"].astype(F32)) * r
+    a = jnp.exp(log_a)
+    b_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * x.astype(F32))
+    return a, b_in
+
+
+def linear_scan_ref(a, b, h0=None):
+    """h_t = a_t h_{t-1} + b_t, sequential. a,b: (B,S,W)."""
+    if h0 is None:
+        h0 = jnp.zeros((a.shape[0], a.shape[2]), F32)
+
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    hf, ys = lax.scan(step, h0.astype(F32),
+                      (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), hf
+
+
+def linear_scan_assoc(a, b, h0=None):
+    """Parallel (log-depth) scan over the sequence axis."""
+    if h0 is not None:
+        # fold h0 into the first step: b_0 += a_0 * h0
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(F32))
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    ya, yb = lax.associative_scan(combine, (a.astype(F32), b.astype(F32)), axis=1)
+    return yb, yb[:, -1]
+
+
+def linear_scan_blocked(a, b, h0=None, *, block: int = 256):
+    """Sequential over blocks, associative within a block: log-depth work with
+    O(block·W) peak memory instead of O(S·W·log S) — mirrors the Pallas
+    kernel's VMEM-state structure."""
+    bsz, s, w = a.shape
+    if s <= block:
+        return linear_scan_assoc(a, b, h0)
+    pad = (-s) % block
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+    nb = a.shape[1] // block
+    ab = jnp.moveaxis(a.reshape(bsz, nb, block, w), 1, 0)
+    bb = jnp.moveaxis(b.reshape(bsz, nb, block, w), 1, 0)
+    h0 = jnp.zeros((bsz, w), F32) if h0 is None else h0.astype(F32)
+
+    def step(h, inp):
+        a_blk, b_blk = inp
+        ys, hf = linear_scan_assoc(a_blk, b_blk, h)
+        return hf, ys
+
+    hf, ys = lax.scan(step, h0, (ab, bb))
+    ys = jnp.moveaxis(ys, 0, 1).reshape(bsz, nb * block, w)[:, :s]
+    return ys, ys[:, -1]
+
+
+def linear_scan(a, b, h0=None, *, impl: str = "chunked"):
+    if impl == "ref":
+        return linear_scan_ref(a, b, h0)
+    if impl == "chunked":
+        return linear_scan_blocked(a, b, h0)
+    from repro.core.xaif import REGISTRY
+
+    return REGISTRY.dispatch("rglru", impl, a, b, h0)
+
+
+# ---------------------------------------------------------------------------
+# Declarations
+# ---------------------------------------------------------------------------
+
+
+def _rglru_decls(width: int, nb: int) -> dict[str, ParamDecl]:
+    bs = width // nb
+    return {
+        "a_param": ParamDecl((width,), Axes(lx.RNN_WIDTH), init="normal", scale=0.5),
+        "w_r": ParamDecl((nb, bs, bs), Axes(lx.HEADS, None, None), init="fan_in"),
+        "b_r": ParamDecl((width,), Axes(lx.RNN_WIDTH), init="zeros"),
+        "w_i": ParamDecl((nb, bs, bs), Axes(lx.HEADS, None, None), init="fan_in"),
+        "b_i": ParamDecl((width,), Axes(lx.RNN_WIDTH), init="zeros"),
+    }
+
+
+def _rec_mix_decls(cfg: ModelConfig) -> dict[str, Any]:
+    d, w = cfg.d_model, cfg.rnn_width or cfg.d_model
+    return {
+        "ln": L.rmsnorm_decl(d),
+        "w_y": ParamDecl((d, w), Axes(lx.EMBED, lx.RNN_WIDTH), init="fan_in"),
+        "w_x": ParamDecl((d, w), Axes(lx.EMBED, lx.RNN_WIDTH), init="fan_in"),
+        "conv": L.conv1d_decl(cfg.ssm_conv_width, w),
+        "rglru": _rglru_decls(w, cfg.n_heads),
+        "w_out": ParamDecl((w, d), Axes(lx.RNN_WIDTH, lx.EMBED), init="fan_in"),
+    }
+
+
+def _attn_mix_decls(cfg: ModelConfig) -> dict[str, ParamDecl]:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "ln": L.rmsnorm_decl(d),
+        "wq": ParamDecl((d, h, hd), Axes(lx.EMBED, lx.HEADS, lx.HEAD_DIM), init="fan_in"),
+        "wk": ParamDecl((d, k, hd), Axes(lx.EMBED, lx.KV_HEADS, lx.HEAD_DIM), init="fan_in"),
+        "wv": ParamDecl((d, k, hd), Axes(lx.EMBED, lx.KV_HEADS, lx.HEAD_DIM), init="fan_in"),
+        "wo": ParamDecl((h, hd, d), Axes(lx.HEADS, lx.HEAD_DIM, lx.EMBED), init="fan_in"),
+    }
+
+
+def _layer_decls(cfg: ModelConfig, kind: str) -> dict[str, Any]:
+    mix = _rec_mix_decls(cfg) if kind == "rec" else _attn_mix_decls(cfg)
+    return {"mix": mix, "ln_mlp": L.rmsnorm_decl(cfg.d_model),
+            "mlp": L.mlp_decls(cfg.d_model, cfg.d_ff, cfg.mlp_type)}
+
+
+def _pattern(cfg: ModelConfig) -> list[str]:
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+
+
+def plan(cfg: ModelConfig) -> tuple[int, list[str]]:
+    """(n_triples, tail_kinds)."""
+    pat = _pattern(cfg)
+    plen = len(cfg.block_pattern or ("rec", "rec", "attn"))
+    n_full = cfg.n_layers // plen
+    tail = pat[n_full * plen:]
+    return n_full, tail
+
+
+def decls(cfg: ModelConfig) -> dict[str, Any]:
+    from repro.sharding.params import stack_tree
+
+    n_full, tail = plan(cfg)
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    triple = {f"p{j}_{k}": _layer_decls(cfg, k) for j, k in enumerate(pat)}
+    tree: dict[str, Any] = {
+        "embed": L.embed_decl(cfg),
+        "triples": stack_tree(triple, n_full, lx.LAYERS),
+        "tail": {f"t{j}_{k}": _layer_decls(cfg, k) for j, k in enumerate(tail)},
+        "ln_f": L.rmsnorm_decl(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        tree["head"] = L.head_decl(cfg)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GriffinCache:
+    conv: jax.Array    # (n_rec, B, cw-1, W)
+    h: jax.Array       # (n_rec, B, W) fp32
+    k: jax.Array       # (n_attn, B, win, kv, hd)
+    v: jax.Array
+    pos: jax.Array
+
+    @staticmethod
+    def _shapes(cfg: ModelConfig, batch: int, max_len: int):
+        kinds = _pattern(cfg)
+        n_rec = kinds.count("rec")
+        n_attn = kinds.count("attn")
+        w = cfg.rnn_width or cfg.d_model
+        win = min(cfg.attn_window or max_len, max_len)
+        return (
+            (n_rec, batch, cfg.ssm_conv_width - 1, w),
+            (n_rec, batch, w),
+            (n_attn, batch, win, cfg.n_kv_heads, cfg.resolved_head_dim),
+        )
+
+    @staticmethod
+    def init(cfg, batch, max_len, dtype=jnp.bfloat16) -> "GriffinCache":
+        s = GriffinCache._shapes(cfg, batch, max_len)
+        return GriffinCache(jnp.zeros(s[0], dtype), jnp.zeros(s[1], F32),
+                            jnp.zeros(s[2], dtype), jnp.zeros(s[2], dtype),
+                            jnp.zeros((), jnp.int32))
+
+    @staticmethod
+    def abstract(cfg, batch, max_len, dtype=jnp.bfloat16) -> "GriffinCache":
+        s = GriffinCache._shapes(cfg, batch, max_len)
+        return GriffinCache(jax.ShapeDtypeStruct(s[0], dtype),
+                            jax.ShapeDtypeStruct(s[1], F32),
+                            jax.ShapeDtypeStruct(s[2], dtype),
+                            jax.ShapeDtypeStruct(s[2], dtype),
+                            jax.ShapeDtypeStruct((), jnp.int32))
+
+    @staticmethod
+    def axes() -> "GriffinCache":
+        kv = Axes(None, lx.DECODE_BATCH, lx.CACHE_SEQ, lx.KV_HEADS, lx.HEAD_DIM)
+        return GriffinCache(Axes(None, lx.DECODE_BATCH, None, lx.RNN_WIDTH),
+                            Axes(None, lx.DECODE_BATCH, lx.RNN_WIDTH), kv, kv, Axes())
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _rec_mix_train(x, p, cfg: ModelConfig):
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    y = jax.nn.gelu(h @ p["w_y"].astype(h.dtype))
+    u = h @ p["w_x"].astype(h.dtype)
+    u, _ = L.causal_conv1d(u, p["conv"].astype(u.dtype))
+    a, b_in = rglru_gates(u, p["rglru"], cfg.rglru_c)
+    ys, _ = linear_scan(a, b_in, impl=cfg.scan_impl)
+    out = (ys.astype(x.dtype) * y) @ p["w_out"].astype(x.dtype)
+    return x + out
+
+
+def _rec_mix_decode(x, p, cfg: ModelConfig, conv_st, h_st):
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    y = jax.nn.gelu(h @ p["w_y"].astype(h.dtype))
+    u = h @ p["w_x"].astype(h.dtype)
+    u, conv2 = L.causal_conv1d(u, p["conv"].astype(u.dtype), conv_st)
+    a, b_in = rglru_gates(u, p["rglru"], cfg.rglru_c)
+    h_new = a[:, 0] * h_st + b_in[:, 0]
+    out = (h_new[:, None].astype(x.dtype) * y) @ p["w_out"].astype(x.dtype)
+    return x + out, conv2, h_new
+
+
+def _attn_mix_train(x, p, cfg: ModelConfig, positions):
+    from repro.models.transformer import _project_qkv
+
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    q, k, v = _project_qkv(h, p, cfg, positions)
+    o = L.attention(q, k, v, impl=cfg.attn_impl, causal=True, window=cfg.attn_window)
+    return x + jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+
+
+def _attn_mix_decode(x, p, cfg: ModelConfig, ck, cv, pos):
+    from repro.models.transformer import _project_qkv
+
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    q, k, v = _project_qkv(h, p, cfg, pos[None, None])
+    win = ck.shape[1]
+    slot = pos % win
+    ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, axis=1)
+    kv_len = jnp.minimum(pos + 1, win)
+    o = L.attention(q, ck, cv, impl="chunked", causal=False, kv_len=kv_len)
+    return x + jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype)), ck, cv
+
+
+def _layer_train(x, lp, kind, cfg, positions):
+    if kind == "rec":
+        x = _rec_mix_train(x, jax.tree.map(lambda a: a, lp["mix"]), cfg)
+    else:
+        x = _attn_mix_train(x, lp["mix"], cfg, positions)
+    h = L.rmsnorm(x, lp["ln_mlp"], cfg.norm_eps)
+    return x + L.mlp(h, jax.tree.map(lambda a: a.astype(x.dtype), lp["mlp"]),
+                     cfg.mlp_type)
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None):
+    b, s = (tokens.shape if tokens is not None else embeds.shape[:2])
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    x = params["embed"].astype(jnp.bfloat16)[tokens] if embeds is None else embeds
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)  # gemma-style scaling
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+
+    def body(carry, tp):
+        xc = carry
+        for j, kind in enumerate(pat):
+            xc = _layer_train(xc, tp[f"p{j}_{kind}"], kind, cfg, positions)
+        return xc, None
+
+    from repro.models.transformer import _maybe_remat
+
+    x, _ = lax.scan(_maybe_remat(body, cfg), x, params["triples"])
+    _, tail = plan(cfg)
+    for j, kind in enumerate(tail):
+        x = _layer_train(x, params["tail"][f"t{j}_{kind}"], kind, cfg, positions)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return L.lm_head(x, params, cfg), jnp.zeros((), F32)
+
+
+def _rec_mix_prefill(x, p, cfg: ModelConfig):
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    y = jax.nn.gelu(h @ p["w_y"].astype(h.dtype))
+    u = h @ p["w_x"].astype(h.dtype)
+    tail = u[:, -(cfg.ssm_conv_width - 1):]
+    u, _ = L.causal_conv1d(u, p["conv"].astype(u.dtype))
+    a, b_in = rglru_gates(u, p["rglru"], cfg.rglru_c)
+    ys, h_fin = linear_scan(a, b_in, impl=cfg.scan_impl)
+    out = (ys.astype(x.dtype) * y) @ p["w_out"].astype(x.dtype)
+    return x + out, tail, h_fin
+
+
+def _attn_mix_prefill(x, p, cfg: ModelConfig, positions, win: int):
+    import numpy as np
+
+    from repro.models.transformer import _project_qkv
+
+    b, s = x.shape[:2]
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    q, k, v = _project_qkv(h, p, cfg, positions)
+    o = L.attention(q, k, v, impl=cfg.attn_impl, causal=True, window=cfg.attn_window)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    cdtype = jnp.bfloat16
+    if s >= win:
+        slots = np.arange(s - win, s) % win
+        ck = jnp.zeros((b, win, *k.shape[2:]), cdtype).at[:, slots].set(
+            k[:, s - win:].astype(cdtype))
+        cv = jnp.zeros((b, win, *v.shape[2:]), cdtype).at[:, slots].set(
+            v[:, s - win:].astype(cdtype))
+    else:
+        ck = jnp.pad(k.astype(cdtype), ((0, 0), (0, win - s), (0, 0), (0, 0)))
+        cv = jnp.pad(v.astype(cdtype), ((0, 0), (0, win - s), (0, 0), (0, 0)))
+    return x, ck, cv
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, max_len=None):
+    b, s = (tokens.shape if tokens is not None else embeds.shape[:2])
+    max_len = max_len or s
+    win = min(cfg.attn_window or max_len, max_len)
+    positions = jnp.arange(s)[None, :]
+    x = params["embed"].astype(jnp.bfloat16)[tokens] if embeds is None else embeds
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+
+    def body(carry, tp):
+        xc = carry
+        convs, hs, ks, vs = [], [], [], []
+        for j, kind in enumerate(pat):
+            lp = tp[f"p{j}_{kind}"]
+            if kind == "rec":
+                xc, tail_c, h_fin = _rec_mix_prefill(xc, lp["mix"], cfg)
+                convs.append(tail_c)
+                hs.append(h_fin)
+            else:
+                xc, ck, cv = _attn_mix_prefill(xc, lp["mix"], cfg, positions, win)
+                ks.append(ck)
+                vs.append(cv)
+            hh = L.rmsnorm(xc, lp["ln_mlp"], cfg.norm_eps)
+            xc = xc + L.mlp(hh, jax.tree.map(lambda a: a.astype(xc.dtype), lp["mlp"]),
+                            cfg.mlp_type)
+        return xc, (jnp.stack(convs), jnp.stack(hs), jnp.stack(ks), jnp.stack(vs))
+
+    body_fn = body if cfg.remat == "none" else jax.checkpoint(body)
+    x, (convs, hs, ks, vs) = lax.scan(body_fn, x, params["triples"])
+    convs = [convs.reshape(-1, *convs.shape[2:])]
+    hs = [hs.reshape(-1, *hs.shape[2:])]
+    ks = [ks.reshape(-1, *ks.shape[2:])]
+    vs = [vs.reshape(-1, *vs.shape[2:])]
+    _, tail = plan(cfg)
+    for j, kind in enumerate(tail):
+        lp = params["tail"][f"t{j}_{kind}"]
+        if kind == "rec":
+            x, tail_c, h_fin = _rec_mix_prefill(x, lp["mix"], cfg)
+            convs.append(tail_c[None])
+            hs.append(h_fin[None])
+        else:
+            x, ck, cv = _attn_mix_prefill(x, lp["mix"], cfg, positions, win)
+            ks.append(ck[None])
+            vs.append(cv[None])
+        hh = L.rmsnorm(x, lp["ln_mlp"], cfg.norm_eps)
+        x = x + L.mlp(hh, jax.tree.map(lambda a: a.astype(x.dtype), lp["mlp"]),
+                      cfg.mlp_type)
+
+    xf = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = L.lm_head(xf, params, cfg)[:, 0]
+    cache = GriffinCache(jnp.concatenate(convs).astype(jnp.bfloat16),
+                         jnp.concatenate(hs).astype(F32),
+                         jnp.concatenate(ks), jnp.concatenate(vs),
+                         jnp.asarray(s, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: GriffinCache, tokens):
+    """tokens (B,1) -> (logits, cache'). Iterates layers unrolled (26 is
+    manageable for a single-token step) to keep heterogeneous cache routing
+    simple and allocation-free."""
+    pos = cache.pos
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    n_full, tail = plan(cfg)
+
+    conv_out, h_out, k_out, v_out = [], [], [], []
+    ri, ai = 0, 0
+
+    def run_layer(x, lp, kind):
+        nonlocal ri, ai
+        if kind == "rec":
+            x2, conv2, h2 = _rec_mix_decode(x, lp["mix"], cfg,
+                                            cache.conv[ri], cache.h[ri])
+            conv_out.append(conv2)
+            h_out.append(h2)
+            ri += 1
+        else:
+            x2, ck, cv = _attn_mix_decode(x, lp["mix"], cfg,
+                                          cache.k[ai], cache.v[ai], pos)
+            k_out.append(ck)
+            v_out.append(cv)
+            ai += 1
+        hh = L.rmsnorm(x2, lp["ln_mlp"], cfg.norm_eps)
+        return x2 + L.mlp(hh, jax.tree.map(lambda a: a.astype(x2.dtype), lp["mlp"]),
+                          cfg.mlp_type)
+
+    for t in range(n_full):
+        tp = jax.tree.map(lambda a: a[t], params["triples"])
+        for j, kind in enumerate(pat):
+            x = run_layer(x, tp[f"p{j}_{kind}"], kind)
+    for j, kind in enumerate(tail):
+        x = run_layer(x, params["tail"][f"t{j}_{kind}"], kind)
+
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_head(x, params, cfg)[:, 0]
+    new = GriffinCache(jnp.stack(conv_out), jnp.stack(h_out),
+                       jnp.stack(k_out), jnp.stack(v_out), pos + 1)
+    return logits, new

@@ -1,0 +1,540 @@
+"""Shared neural layers, declared with ParamDecl and written for GSPMD.
+
+Execution-backend note (the platform's ``core`` choice):
+  * ``ref``     — naive formulations; the correctness oracle family.
+  * ``chunked`` — two-level-blocked online-softmax attention and scan-based
+                  recurrences; the HBM-friendly pure-JAX production path that
+                  the dry-run lowers (flash-attention structure, without the
+                  S² score materialization).
+  * ``pallas``  — TPU kernels from :mod:`repro.kernels` plugged in via XAIF.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding import axes as lx
+from repro.sharding.params import Axes, ParamDecl
+
+F32 = jnp.float32
+
+# ---------------------------------------------------------------------------
+# Norms / embeddings / positional
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_decl(d: int) -> ParamDecl:
+    return ParamDecl((d,), Axes(lx.EMBED), init="ones")
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(F32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * lax.rsqrt(var + eps)) * scale.astype(F32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=F32) / half)
+    ang = positions.astype(F32)[..., None] * freqs  # (..., seq, half)
+    ang = ang[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-math.log(1e4) * jnp.arange(half, dtype=F32) / half)
+    ang = positions.astype(F32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention — ref / chunked(two-level flash-structured) / banded-local
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _gqa_fold(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B,S,H,D) -> (B,S,K,G,D)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  q_offset: int = 0, kv_len: jax.Array | None = None) -> jax.Array:
+    """Naive full-score oracle. q:(B,Sq,H,D) k,v:(B,Sk,K,D)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    nkv = k.shape[2]
+    qf = _gqa_fold(q, nkv).astype(F32)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qf, k.astype(F32)) / math.sqrt(d)
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bqkgd", p, v.astype(F32))
+    return o.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def _blk_mask(qpos, kpos, causal, window, kv_limit):
+    mask = kpos[None, :] < kv_limit
+    if causal:
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    if window is not None:
+        mask = mask & (qpos[:, None] - kpos[None, :] < window)
+    return mask  # (qb, kb)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _flash(q, k, v, kv_limit, causal, window, q_offset, q_block, kv_block):
+    out, _ = _flash_fwd_impl(q, k, v, kv_limit, causal, window, q_offset,
+                             q_block, kv_block)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, kv_limit, causal, window, q_offset, q_block, kv_block):
+    """Returns (out (B,Sq,H,D), lse (B,K,G,Sq_pad)). Only O(S·D) live memory:
+    the FlashAttention forward, expressed as a two-level lax.scan."""
+    b, sq, h, d = q.shape
+    sk, nkv = k.shape[1], k.shape[2]
+    qb, kb = min(q_block, sq), min(kv_block, sk)
+    sq_p, sk_p = -(-sq // qb) * qb, -(-sk // kb) * kb
+    qf = _gqa_fold(jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0))), nkv)
+    kp = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    scale = 1.0 / math.sqrt(d)
+    g = h // nkv
+    n_q, n_k = sq_p // qb, sk_p // kb
+
+    def q_step(_, qi):
+        qblk = lax.dynamic_slice_in_dim(qf, qi * qb, qb, axis=1).astype(F32)
+        qpos = q_offset + qi * qb + jnp.arange(qb)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk = lax.dynamic_slice_in_dim(kp, ki * kb, kb, axis=1)
+            vblk = lax.dynamic_slice_in_dim(vp, ki * kb, kb, axis=1)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qblk, kblk.astype(F32)) * scale
+            kpos = ki * kb + jnp.arange(kb)
+            mask = _blk_mask(qpos, kpos, causal, window, kv_limit)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p, vblk.astype(F32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, nkv, g, qb), NEG_INF, F32)
+        l0 = jnp.zeros((b, nkv, g, qb), F32)
+        a0 = jnp.zeros((b, nkv, g, qb, d), F32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(n_k))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))        # (B,K,G,qb)
+        return None, (o.transpose(0, 3, 1, 2, 4), lse)
+
+    _, (blocks, lses) = lax.scan(q_step, None, jnp.arange(n_q))
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq_p, h, d)
+    lse = jnp.moveaxis(lses, 0, -2).reshape(b, nkv, g, sq_p)  # (B,K,G,n_q*qb)
+    return out[:, :sq].astype(q.dtype), lse
+
+
+def _flash_fwd(q, k, v, kv_limit, causal, window, q_offset, q_block, kv_block):
+    out, lse = _flash_fwd_impl(q, k, v, kv_limit, causal, window, q_offset,
+                               q_block, kv_block)
+    return out, (q, k, v, out, lse, kv_limit)
+
+
+def _flash_bwd(causal, window, q_offset, q_block, kv_block, res, do):
+    """FlashAttention backward: recompute score tiles — nothing O(S²) stored."""
+    q, k, v, out, lse, kv_limit = res
+    b, sq, h, d = q.shape
+    sk, nkv = k.shape[1], k.shape[2]
+    qb, kb = min(q_block, sq), min(kv_block, sk)
+    sq_p, sk_p = -(-sq // qb) * qb, -(-sk // kb) * kb
+    scale = 1.0 / math.sqrt(d)
+    g = h // nkv
+    n_q, n_k = sq_p // qb, sk_p // kb
+
+    pad_q = ((0, 0), (0, sq_p - sq), (0, 0), (0, 0))
+    pad_k = ((0, 0), (0, sk_p - sk), (0, 0), (0, 0))
+    qf = _gqa_fold(jnp.pad(q, pad_q), nkv).astype(F32)       # (B,Sqp,K,G,D)
+    kp = jnp.pad(k, pad_k).astype(F32)
+    vp = jnp.pad(v, pad_k).astype(F32)
+    dof = _gqa_fold(jnp.pad(do.astype(F32), pad_q), nkv)
+    of = _gqa_fold(jnp.pad(out.astype(F32), pad_q), nkv)
+    delta = jnp.sum(dof * of, axis=-1)                        # (B,Sqp,K,G)
+    delta = delta.transpose(0, 2, 3, 1)                       # (B,K,G,Sqp)
+
+    def kv_step(dq_acc, ki):
+        kblk = lax.dynamic_slice_in_dim(kp, ki * kb, kb, axis=1)
+        vblk = lax.dynamic_slice_in_dim(vp, ki * kb, kb, axis=1)
+        kpos = ki * kb + jnp.arange(kb)
+
+        def q_step(carry, qi):
+            dk_b, dv_b = carry
+            qblk = lax.dynamic_slice_in_dim(qf, qi * qb, qb, axis=1)
+            doblk = lax.dynamic_slice_in_dim(dof, qi * qb, qb, axis=1)
+            lseblk = lax.dynamic_slice_in_dim(lse, qi * qb, qb, axis=3)
+            dltblk = lax.dynamic_slice_in_dim(delta, qi * qb, qb, axis=3)
+            qpos = q_offset + qi * qb + jnp.arange(qb)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qblk, kblk) * scale
+            mask = _blk_mask(qpos, kpos, causal, window, kv_limit)
+            p = jnp.where(mask[None, None, None],
+                          jnp.exp(s - lseblk[..., None]), 0.0)   # (B,K,G,qb,kb)
+            dv_b = dv_b + jnp.einsum("bkgqc,bqkgd->bckd", p, doblk)
+            dp = jnp.einsum("bqkgd,bckd->bkgqc", doblk, vblk)
+            ds = p * (dp - dltblk[..., None]) * scale
+            dq_blk = jnp.einsum("bkgqc,bckd->bqkgd", ds, kblk)
+            dk_b = dk_b + jnp.einsum("bkgqc,bqkgd->bckd", ds, qblk)
+            return (dk_b, dv_b), (qi, dq_blk)
+
+        dk0 = jnp.zeros((b, kb, nkv, d), F32)
+        dv0 = jnp.zeros((b, kb, nkv, d), F32)
+        (dk_b, dv_b), (_, dq_blocks) = lax.scan(q_step, (dk0, dv0),
+                                                jnp.arange(n_q))
+        # dq_blocks: (n_q, B, qb, K, G, D) -> add into accumulator
+        dq_add = dq_blocks.transpose(1, 0, 2, 3, 4, 5).reshape(
+            b, sq_p, nkv, g, d)
+        return dq_acc + dq_add, (dk_b, dv_b)
+
+    dq0 = jnp.zeros((b, sq_p, nkv, g, d), F32)
+    dq_acc, (dk_blocks, dv_blocks) = lax.scan(kv_step, dq0, jnp.arange(n_k))
+    dq = dq_acc.reshape(b, sq_p, h, d)[:, :sq].astype(q.dtype)
+    dk = dk_blocks.transpose(1, 0, 2, 3, 4).reshape(b, sk_p, nkv, d)[:, :sk].astype(k.dtype)
+    dv = dv_blocks.transpose(1, 0, 2, 3, 4).reshape(b, sk_p, nkv, d)[:, :sk].astype(v.dtype)
+    return dq, dk, dv, None
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention_chunked(q, k, v, *, causal: bool = True, window: int | None = None,
+                      q_offset: int = 0, kv_len: jax.Array | None = None,
+                      q_block: int = 512, kv_block: int = 512) -> jax.Array:
+    """Flash-structured attention in pure JAX with a flash BACKWARD
+    (custom_vjp): neither pass materializes O(S²) score state."""
+    kv_limit = jnp.asarray(k.shape[1] if kv_len is None else kv_len, jnp.int32)
+    return _flash(q, k, v, kv_limit, causal, window, q_offset, q_block, kv_block)
+
+
+def attention_banded(q, k, v, *, window: int, q_block: int = 512,
+                     q_offset: int = 0) -> jax.Array:
+    """Causal sliding-window attention with banded compute: each q block only
+    touches a (window + q_block) KV stripe — O(S·W) FLOPs, the sub-quadratic
+    path that makes long_500k prefill lowering feasible for SWA archs."""
+    b, sq, h, d = q.shape
+    sk, nkv = k.shape[1], k.shape[2]
+    qb = min(q_block, sq)
+    sq_p = -(-sq // qb) * qb
+    stripe = window + qb
+    # left-pad KV by `window` so every stripe slice is in-bounds
+    kp = jnp.pad(k, ((0, 0), (window, sq_p - sq), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, sq_p - sq), (0, 0), (0, 0)))
+    qf = _gqa_fold(jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0))), nkv)
+    scale = 1.0 / math.sqrt(d)
+    g = h // nkv
+    n_q = sq_p // qb
+
+    def q_step(_, qi):
+        qblk = lax.dynamic_slice_in_dim(qf, qi * qb, qb, axis=1).astype(F32)
+        kblk = lax.dynamic_slice_in_dim(kp, qi * qb, stripe, axis=1)
+        vblk = lax.dynamic_slice_in_dim(vp, qi * qb, stripe, axis=1)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qblk, kblk.astype(F32)) * scale
+        qpos = qi * qb + jnp.arange(qb)          # absolute (unpadded) positions
+        kpos = qi * qb + jnp.arange(stripe) - window
+        mask = (qpos[:, None] >= kpos[None, :]) & (qpos[:, None] - kpos[None, :] < window)
+        mask &= kpos[None, :] >= 0
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqc,bckd->bqkgd", p, vblk.astype(F32))
+        return None, o
+
+    _, blocks = lax.scan(q_step, None, jnp.arange(n_q))
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq_p, h, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+_ATTN_IMPLS = {}
+
+
+def attention(q, k, v, *, impl: str = "chunked", causal: bool = True,
+              window: int | None = None, q_offset: int = 0,
+              kv_len=None, repeat_kv: bool | None = None) -> jax.Array:
+    """Dispatch point for the attention op (XAIF-pluggable).
+
+    ``repeat_kv``: materialize KV to the full head count before the score
+    matmuls. Default on for multi-token passes — it keeps the head axis
+    cleanly tensor-parallel (no per-layer resharding when kv_heads doesn't
+    divide the model axis); decode keeps the grouped layout (cache size wins).
+    """
+    if repeat_kv is None:
+        repeat_kv = q.shape[1] > 1
+    if repeat_kv and k.shape[2] != q.shape[2]:
+        g = q.shape[2] // k.shape[2]
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, kv_len=kv_len)
+    if impl == "chunked":
+        if window is not None and causal and q.shape[1] > 1 and kv_len is None \
+                and q.shape[1] == k.shape[1]:
+            return attention_banded(q, k, v, window=window, q_offset=q_offset)
+        return attention_chunked(q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, kv_len=kv_len)
+    if impl in _ATTN_IMPLS:
+        return _ATTN_IMPLS[impl](q, k, v, causal=causal, window=window,
+                                 q_offset=q_offset, kv_len=kv_len)
+    from repro.core.xaif import REGISTRY  # late import: plug-ins register at import
+
+    return REGISTRY.dispatch("attention", impl, q, k, v, causal=causal,
+                             window=window, q_offset=q_offset, kv_len=kv_len)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def mlp_decls(d: int, f: int, kind: str) -> dict[str, ParamDecl]:
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamDecl((d, f), Axes(lx.EMBED, lx.MLP), init="fan_in"),
+            "w_up": ParamDecl((d, f), Axes(lx.EMBED, lx.MLP), init="fan_in"),
+            "w_down": ParamDecl((f, d), Axes(lx.MLP, lx.EMBED), init="fan_in"),
+        }
+    return {  # gelu / squared_relu: plain 2-matrix MLP
+        "w_up": ParamDecl((d, f), Axes(lx.EMBED, lx.MLP), init="fan_in"),
+        "w_down": ParamDecl((f, d), Axes(lx.MLP, lx.EMBED), init="fan_in"),
+    }
+
+
+def mlp(x: jax.Array, p: dict[str, jax.Array], kind: str) -> jax.Array:
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if kind == "geglu":
+        return (jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    h = x @ p["w_up"]
+    if kind == "gelu":
+        h = jax.nn.gelu(h)
+    elif kind == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(f"unknown mlp kind {kind}")
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — capacity-grouped dropless-ish dispatch
+# ---------------------------------------------------------------------------
+
+
+def moe_decls(d: int, f: int, n_exp: int, kind: str = "swiglu",
+              shared: bool = False) -> dict[str, Any]:
+    def e(shape, ax):
+        return ParamDecl((n_exp, *shape), Axes(lx.EXPERT, *ax), init="fan_in")
+
+    decls: dict[str, Any] = {
+        "router": ParamDecl((d, n_exp), Axes(lx.EMBED, None), init="fan_in"),
+        "w_gate": e((d, f), (lx.EMBED, lx.MLP)),
+        "w_up": e((d, f), (lx.EMBED, lx.MLP)),
+        "w_down": e((f, d), (lx.MLP, lx.EMBED)),
+    }
+    if shared:
+        decls["shared"] = mlp_decls(d, f, kind)
+    return decls
+
+
+def _expert_ffn(xg: jax.Array, p: dict[str, jax.Array], kind: str) -> jax.Array:
+    """xg: (E, C, d) -> (E, C, d); experts batched on dim 0 (EP-shardable)."""
+    gate = jnp.einsum("ecd,edf->ecf", xg, p["w_gate"])
+    up = jnp.einsum("ecd,edf->ecf", xg, p["w_up"])
+    act = jax.nn.silu(gate) if kind == "swiglu" else jax.nn.gelu(gate)
+    return jnp.einsum("ecf,efd->ecd", act * up, p["w_down"])
+
+
+# Optional sharding constraint on the dispatched (E, capacity, d_model)
+# buffer. Setting it to e.g. PartitionSpec("model", "data", None) gives
+# expert-parallel dispatch with the capacity dim data-sharded: expert-FFN
+# contractions stay local and the scatter-back lowers to all-to-all instead
+# of partial-sum all-reduces (EXPERIMENTS.md §Perf G5).
+MOE_DISPATCH_SPEC = None
+
+
+def set_moe_dispatch_spec(spec) -> None:
+    global MOE_DISPATCH_SPEC
+    MOE_DISPATCH_SPEC = spec
+
+
+def moe(x: jax.Array, p: dict[str, Any], *, n_exp: int, top_k: int,
+        capacity_factor: float = 1.25, kind: str = "swiglu",
+        impl: str = "chunked") -> tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_loss). x: (B, S, d).
+
+    Dispatch is sort-based with a static per-expert capacity: tokens beyond
+    capacity are dropped (their slot contributes nothing) — GShard semantics.
+    Unrouted experts do no useful work; under expert-parallel sharding this is
+    the MoE rendition of X-HEEP power-gating: a domain with no activity.
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = (xt.astype(F32) @ p["router"].astype(F32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = lax.top_k(probs, top_k)             # (T,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=0)                           # (E,)
+    ce = jnp.zeros((n_exp,), F32).at[eidx.reshape(-1)].add(
+        jnp.ones((t * top_k,), F32)) / (t * top_k)
+    aux = n_exp * jnp.sum(me * ce)
+
+    cap = int(max(8, -(-int(t * top_k * capacity_factor / n_exp) // 8) * 8))
+    cap = min(cap, t)
+
+    slot_e = eidx.reshape(-1)                         # (T*k,)
+    slot_g = gates.reshape(-1)
+    order = jnp.argsort(slot_e)                       # stable
+    sorted_e = slot_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(n_exp))
+    pos = jnp.arange(t * top_k) - seg_start[sorted_e]
+    keep = pos < cap
+    dest = sorted_e * cap + pos                       # (T*k,) flat slot id
+    tok = order // top_k                              # token of each sorted slot
+
+    # gather tokens into (E, cap, d); sentinel row t -> zeros
+    buf = jnp.full((n_exp * cap,), t, jnp.int32)
+    buf = buf.at[jnp.where(keep, dest, n_exp * cap)].set(
+        tok.astype(jnp.int32), mode="drop")
+    xg = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)])[buf]
+    xg = xg.reshape(n_exp, cap, d)
+    if MOE_DISPATCH_SPEC is not None:
+        xg = lax.with_sharding_constraint(xg, MOE_DISPATCH_SPEC)
+
+    if impl == "pallas":
+        from repro.core.xaif import REGISTRY
+
+        hg = REGISTRY.dispatch("moe_ffn", "pallas", xg, p, kind)
+    else:
+        hg = _expert_ffn(xg, p, kind)
+
+    h_flat = hg.reshape(n_exp * cap, d)
+    slot_out = h_flat[jnp.where(keep, dest, 0)]
+    w = (slot_g[order] * keep).astype(F32)[:, None]
+    out = jnp.zeros((t + 1, d), F32).at[tok].add(slot_out.astype(F32) * w)[:-1]
+    out = out.astype(x.dtype).reshape(b, s, d)
+    if "shared" in p:
+        out = out + mlp(x, p["shared"], kind)
+    return out, aux
+
+
+def moe_dense_ref(x, p, *, n_exp, top_k, kind="swiglu"):
+    """Oracle: computes every expert densely then mixes. O(E) FLOPs."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = xt.astype(F32) @ p["router"].astype(F32)
+    probs = jax.nn.softmax(logits, -1)
+    gates, eidx = lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    full = jnp.zeros((b * s, n_exp), F32)
+    full = jax.vmap(lambda f, g, i: f.at[i].set(g))(full, gates, eidx)
+    outs = _expert_ffn(jnp.broadcast_to(xt, (n_exp, b * s, d)).transpose(0, 1, 2), p, kind)
+    out = jnp.einsum("te,etd->td", full, outs.astype(F32))
+    if "shared" in p:
+        out = out + mlp(x, p["shared"], kind).reshape(b * s, d).astype(F32)
+    return out.astype(x.dtype).reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (mamba2 / griffin temporal conv)
+# ---------------------------------------------------------------------------
+
+
+def conv1d_decl(width: int, channels: int) -> ParamDecl:
+    return ParamDecl((width, channels), Axes(lx.CONV, lx.RNN_WIDTH), init="fan_in")
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array,
+                  state: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """x: (B,S,D), w: (W,D). Returns (y, new_state); state: (B,W-1,D)."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)
+    y = sum(xx[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xx[:, -(width - 1):] if width > 1 else state
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# LM head (shared across families; handles tying + vocab padding)
+# ---------------------------------------------------------------------------
+
+
+def embed_decl(cfg) -> "ParamDecl":
+    return ParamDecl((cfg.padded_vocab, cfg.d_model), Axes("vocab_in", lx.EMBED),
+                     init="normal", scale=0.02)
+
+
+def head_decl(cfg) -> "ParamDecl":
+    return ParamDecl((cfg.d_model, cfg.padded_vocab), Axes(lx.EMBED, lx.VOCAB),
+                     init="fan_in")
+
+
+def lm_head(x: jax.Array, params, cfg) -> jax.Array:
+    """x: (..., d_model) -> logits (..., padded_vocab) with padding masked."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, params["head"].astype(x.dtype))
+    if cfg.padded_vocab != cfg.vocab:
+        iota = lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(iota < cfg.vocab, logits,
+                           jnp.asarray(NEG_INF, logits.dtype))
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 0.0) -> jax.Array:
+    """TPU-friendly CE over a (possibly vocab-sharded) last axis: uses an
+    iota-compare select instead of gather/one-hot so GSPMD reduces locally."""
+    logits = logits.astype(F32)
+    m = lax.stop_gradient(logits.max(-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    iota = lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    picked = jnp.sum(jnp.where(iota == labels[..., None], shifted, 0.0), axis=-1)
+    picked = picked + m[..., 0]
+    loss = lse - picked
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return loss

@@ -1,0 +1,332 @@
+"""Mamba-2 (state-space duality, arXiv:2405.21060) in JAX.
+
+The SSD scan has three backends:
+  * ``ref``     — sequential recurrence over time (oracle; O(S) steps);
+  * ``chunked`` — the paper's chunk-parallel SSD algorithm (matmul-rich; the
+                  TPU-friendly production formulation the dry-run lowers);
+  * ``pallas``  — fused chunk kernel via XAIF (:mod:`repro.kernels.ssd`).
+
+State per layer is O(heads × head_dim × state): decode cost is independent of
+context length — the long_500k-eligible property.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.sharding import axes as lx
+from repro.sharding.params import Axes, ParamDecl
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """x: (..., l) -> (..., l, l) with out[..., i, j] = sum_{k=j+1..i} x[k]
+    (=-inf above the diagonal)."""
+    l = x.shape[-1]
+    xx = jnp.broadcast_to(x[..., None], (*x.shape, l))  # (..., i, j) holds x[i]
+    mask_strict = jnp.tril(jnp.ones((l, l), bool), -1)  # true where j < i
+    xx = jnp.where(mask_strict, xx, 0.0)
+    out = jnp.cumsum(xx, axis=-2)  # out[i,j] = sum_{k=j+1..i} x[k]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dA, B, C, *, chunk: int, init_state=None,
+                compute_dtype=F32):
+    """Chunk-parallel SSD. x:(b,s,h,p) pre-scaled by dt; dA:(b,s,h);
+    B,C:(b,s,h,n). Returns (y:(b,s,h,p), final_state:(b,h,p,n)).
+
+    ``compute_dtype=bfloat16`` keeps the matmul operands (x, B, C) and the
+    emitted y in bf16 (fp32 accumulation via preferred_element_type) — the
+    decay math and the carried state stay fp32."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    s_orig = s
+    if s % q:
+        # pad with identity steps: x=0, dA=0 (decay 1) leaves state untouched
+        pad = q - s % q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // q
+
+    cdt = compute_dtype
+
+    def to_chunks(a, dt):
+        return jnp.moveaxis(a.astype(dt).reshape(b, nc, q, *a.shape[2:]), 1, 0)
+
+    xc = to_chunks(x, cdt)
+    dAc = to_chunks(dA, F32)
+    Bc = to_chunks(B, cdt)
+    Cc = to_chunks(C, cdt)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), F32)
+
+    # Sequential scan over chunks (mirrors the Pallas kernel): peak memory is
+    # ONE chunk's (q × q) decay tile per head instead of all chunks at once.
+    def step(state, inp):
+        xq, dAq, Bq, Cq = inp                   # (b,q,...) one chunk
+        dAq = jnp.moveaxis(dAq, -1, 1)          # (b,h,q)
+        a_cs = jnp.cumsum(dAq, axis=-1)         # (b,h,q)
+        Lmat = jnp.exp(segsum(dAq)).astype(cdt)  # (b,h,q,q)
+        y = jnp.einsum("blhn,bshn,bhls,bshp->blhp", Cq, Bq, Lmat, xq,
+                       preferred_element_type=F32)
+        # incoming-state contribution
+        y = y + jnp.einsum("blhn,bhpn,bhl->blhp", Cq.astype(F32), state,
+                           jnp.exp(a_cs))
+        # state update
+        decay_states = jnp.exp(a_cs[..., -1:] - a_cs)   # (b,h,q)
+        new_state = state * jnp.exp(a_cs[..., -1])[..., None, None] \
+            + jnp.einsum("blhn,bhl,blhp->bhpn", Bq.astype(F32), decay_states,
+                         xq.astype(F32))
+        return new_state, y.astype(cdt)
+
+    final_state, ys = lax.scan(step, init_state.astype(F32), (xc, dAc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_ref(x, dA, B, C, *, init_state=None, chunk: int = 0):
+    """Sequential oracle recurrence."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), F32)
+
+    def step(state, inp):
+        x_t, dA_t, B_t, C_t = inp
+        state = state * jnp.exp(dA_t.astype(F32))[..., None, None] \
+            + jnp.einsum("bhp,bhn->bhpn", x_t.astype(F32), B_t.astype(F32))
+        y = jnp.einsum("bhpn,bhn->bhp", state, C_t.astype(F32))
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dA, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    final, ys = lax.scan(step, init_state.astype(F32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final
+
+
+def ssd(x, dA, B, C, *, impl: str, chunk: int, init_state=None,
+        compute_dtype=F32):
+    if impl == "ref":
+        return ssd_ref(x, dA, B, C, init_state=init_state)
+    if impl == "chunked":
+        return ssd_chunked(x, dA, B, C, chunk=chunk, init_state=init_state,
+                           compute_dtype=compute_dtype)
+    from repro.core.xaif import REGISTRY
+
+    return REGISTRY.dispatch("ssd", impl, x, dA, B, C, chunk=chunk,
+                             init_state=init_state)
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+
+def _layer_decls(cfg: ModelConfig) -> dict[str, Any]:
+    d, di, h, n, w = (cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state,
+                      cfg.ssm_conv_width)
+    return {
+        "ln": L.rmsnorm_decl(d),
+        "w_z": ParamDecl((d, di), Axes(lx.EMBED, lx.RNN_WIDTH), init="fan_in"),
+        "w_x": ParamDecl((d, di), Axes(lx.EMBED, lx.RNN_WIDTH), init="fan_in"),
+        "w_B": ParamDecl((d, n), Axes(lx.EMBED, lx.STATE), init="fan_in"),
+        "w_C": ParamDecl((d, n), Axes(lx.EMBED, lx.STATE), init="fan_in"),
+        "w_dt": ParamDecl((d, h), Axes(lx.EMBED, lx.HEADS), init="fan_in"),
+        "conv_x": L.conv1d_decl(w, di),
+        "conv_B": ParamDecl((w, n), Axes(lx.CONV, lx.STATE), init="fan_in"),
+        "conv_C": ParamDecl((w, n), Axes(lx.CONV, lx.STATE), init="fan_in"),
+        "A_log": ParamDecl((h,), Axes(lx.HEADS), init="zeros"),
+        "D": ParamDecl((h,), Axes(lx.HEADS), init="ones"),
+        "dt_bias": ParamDecl((h,), Axes(lx.HEADS), init="zeros"),
+        "ln_gate": ParamDecl((di,), Axes(lx.RNN_WIDTH), init="ones"),
+        "w_out": ParamDecl((di, d), Axes(lx.RNN_WIDTH, lx.EMBED), init="fan_in"),
+    }
+
+
+def decls(cfg: ModelConfig) -> dict[str, Any]:
+    from repro.sharding.params import stack_tree
+
+    tree: dict[str, Any] = {
+        "embed": L.embed_decl(cfg),
+        "blocks": stack_tree(_layer_decls(cfg), cfg.n_layers, lx.LAYERS),
+        "ln_f": L.rmsnorm_decl(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        tree["head"] = L.head_decl(cfg)
+    return tree
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SSMCache:
+    conv_x: jax.Array   # (L, B, W-1, d_inner)
+    conv_B: jax.Array   # (L, B, W-1, n)
+    conv_C: jax.Array   # (L, B, W-1, n)
+    state: jax.Array    # (L, B, H, P, N)
+    pos: jax.Array
+
+    @staticmethod
+    def _shapes(cfg: ModelConfig, batch: int):
+        w = cfg.ssm_conv_width
+        return (
+            (cfg.n_layers, batch, w - 1, cfg.d_inner),
+            (cfg.n_layers, batch, w - 1, cfg.ssm_state),
+            (cfg.n_layers, batch, w - 1, cfg.ssm_state),
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+        )
+
+    @staticmethod
+    def init(cfg, batch, max_len=None, dtype=jnp.bfloat16) -> "SSMCache":
+        s = SSMCache._shapes(cfg, batch)
+        return SSMCache(jnp.zeros(s[0], dtype), jnp.zeros(s[1], dtype),
+                        jnp.zeros(s[2], dtype), jnp.zeros(s[3], jnp.float32),
+                        jnp.zeros((), jnp.int32))
+
+    @staticmethod
+    def abstract(cfg, batch, max_len=None, dtype=jnp.bfloat16) -> "SSMCache":
+        s = SSMCache._shapes(cfg, batch)
+        return SSMCache(jax.ShapeDtypeStruct(s[0], dtype),
+                        jax.ShapeDtypeStruct(s[1], dtype),
+                        jax.ShapeDtypeStruct(s[2], dtype),
+                        jax.ShapeDtypeStruct(s[3], jnp.float32),
+                        jax.ShapeDtypeStruct((), jnp.int32))
+
+    @staticmethod
+    def axes() -> "SSMCache":
+        return SSMCache(
+            Axes(lx.LAYERS, lx.DECODE_BATCH, None, lx.RNN_WIDTH),
+            Axes(lx.LAYERS, lx.DECODE_BATCH, None, lx.STATE),
+            Axes(lx.LAYERS, lx.DECODE_BATCH, None, lx.STATE),
+            Axes(lx.LAYERS, lx.DECODE_BATCH, lx.HEADS, lx.HEAD_DIM, lx.STATE),
+            Axes(),
+        )
+
+
+def _mix(x, lp, cfg: ModelConfig):
+    """Shared projection stage. Returns z, xs (pre-scaled), dA, B, C, dt."""
+    h = L.rmsnorm(x, lp["ln"], cfg.norm_eps)
+    z = h @ lp["w_z"].astype(h.dtype)
+    xin = h @ lp["w_x"].astype(h.dtype)
+    Braw = h @ lp["w_B"].astype(h.dtype)
+    Craw = h @ lp["w_C"].astype(h.dtype)
+    dt_raw = h @ lp["w_dt"].astype(h.dtype)
+    return z, xin, Braw, Craw, dt_raw
+
+
+def _ssm_math(xin, Braw, Craw, dt_raw, lp, cfg: ModelConfig):
+    b, s = xin.shape[:2]
+    hn, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    dt = jax.nn.softplus(dt_raw.astype(F32) + lp["dt_bias"].astype(F32))  # (b,s,h)
+    A = -jnp.exp(lp["A_log"].astype(F32))                                  # (h,)
+    dA = dt * A
+    xh = xin.reshape(b, s, hn, p)
+    xs = xh.astype(F32) * dt[..., None]
+    Bh = jnp.broadcast_to(Braw[:, :, None, :], (b, s, hn, n))
+    Ch = jnp.broadcast_to(Craw[:, :, None, :], (b, s, hn, n))
+    return xh, xs, dA, Bh, Ch
+
+
+def _block_train(x, lp, cfg: ModelConfig):
+    z, xin, Braw, Craw, dt_raw = _mix(x, lp, cfg)
+    xin, _ = L.causal_conv1d(jax.nn.silu(xin), lp["conv_x"].astype(xin.dtype))
+    Braw, _ = L.causal_conv1d(jax.nn.silu(Braw), lp["conv_B"].astype(Braw.dtype))
+    Craw, _ = L.causal_conv1d(jax.nn.silu(Craw), lp["conv_C"].astype(Craw.dtype))
+    xh, xs, dA, Bh, Ch = _ssm_math(xin, Braw, Craw, dt_raw, lp, cfg)
+    y, _ = ssd(xs, dA, Bh, Ch, impl=cfg.scan_impl, chunk=cfg.ssm_chunk,
+               compute_dtype=jnp.dtype(cfg.ssm_compute_dtype))
+    y = y + xh.astype(F32) * lp["D"].astype(F32)[None, None, :, None]
+    y = y.reshape(*x.shape[:2], cfg.d_inner)
+    y = L.rmsnorm(y.astype(x.dtype) * jax.nn.silu(z), lp["ln_gate"], cfg.norm_eps)
+    return x + y @ lp["w_out"].astype(y.dtype)
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None):
+    x = params["embed"].astype(jnp.bfloat16)[tokens] if embeds is None else embeds
+
+    def body(carry, lp):
+        return _block_train(carry, jax.tree.map(lambda a: a, lp), cfg), None
+
+    from repro.models.transformer import _maybe_remat
+
+    x, _ = lax.scan(_maybe_remat(body, cfg), x, params["blocks"])
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return L.lm_head(x, params, cfg), jnp.zeros((), F32)
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, max_len=None):
+    """Prompt pass producing the SSM cache (final conv tails + states)."""
+    x = params["embed"].astype(jnp.bfloat16)[tokens] if embeds is None else embeds
+    b, s = x.shape[:2]
+    w = cfg.ssm_conv_width
+
+    def body(carry, lp):
+        xc = carry
+        z, xin, Braw, Craw, dt_raw = _mix(xc, lp, cfg)
+        xin_a, Braw_a, Craw_a = (jax.nn.silu(xin), jax.nn.silu(Braw), jax.nn.silu(Craw))
+        conv_tails = (xin_a[:, -(w - 1):], Braw_a[:, -(w - 1):], Craw_a[:, -(w - 1):])
+        xin_c, _ = L.causal_conv1d(xin_a, lp["conv_x"].astype(xin.dtype))
+        Braw_c, _ = L.causal_conv1d(Braw_a, lp["conv_B"].astype(Braw.dtype))
+        Craw_c, _ = L.causal_conv1d(Craw_a, lp["conv_C"].astype(Craw.dtype))
+        xh, xs, dA, Bh, Ch = _ssm_math(xin_c, Braw_c, Craw_c, dt_raw, lp, cfg)
+        y, st = ssd(xs, dA, Bh, Ch, impl=cfg.scan_impl, chunk=cfg.ssm_chunk)
+        y = y + xh.astype(F32) * lp["D"].astype(F32)[None, None, :, None]
+        y = y.reshape(b, s, cfg.d_inner)
+        y = L.rmsnorm(y.astype(xc.dtype) * jax.nn.silu(z), lp["ln_gate"], cfg.norm_eps)
+        return xc + y @ lp["w_out"].astype(y.dtype), (conv_tails, st)
+
+    body_fn = body if cfg.remat == "none" else jax.checkpoint(body)
+    x, (tails, states) = lax.scan(body_fn, x, params["blocks"])
+    xf = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = L.lm_head(xf, params, cfg)[:, 0]
+    cache = SSMCache(tails[0].astype(jnp.bfloat16), tails[1].astype(jnp.bfloat16),
+                     tails[2].astype(jnp.bfloat16), states.astype(F32),
+                     jnp.asarray(s, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: SSMCache, tokens):
+    """tokens: (B,1) -> (logits (B,V), cache')."""
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+
+    def body(carry, inp):
+        xc = carry
+        lp, cx, cB, cC, st = inp
+        z, xin, Braw, Craw, dt_raw = _mix(xc, lp, cfg)
+        xin_c, cx2 = L.causal_conv1d(jax.nn.silu(xin), lp["conv_x"].astype(xin.dtype), cx)
+        Braw_c, cB2 = L.causal_conv1d(jax.nn.silu(Braw), lp["conv_B"].astype(Braw.dtype), cB)
+        Craw_c, cC2 = L.causal_conv1d(jax.nn.silu(Craw), lp["conv_C"].astype(Craw.dtype), cC)
+        xh, xs, dA, Bh, Ch = _ssm_math(xin_c, Braw_c, Craw_c, dt_raw, lp, cfg)
+        # single-step recurrence
+        x_t, dA_t, B_t, C_t = xs[:, 0], dA[:, 0], Bh[:, 0], Ch[:, 0]
+        st2 = st * jnp.exp(dA_t)[..., None, None] \
+            + jnp.einsum("bhp,bhn->bhpn", x_t, B_t)
+        y = jnp.einsum("bhpn,bhn->bhp", st2, C_t)[:, None]
+        y = y + xh.astype(F32) * lp["D"].astype(F32)[None, None, :, None]
+        y = y.reshape(xc.shape[0], 1, cfg.d_inner)
+        y = L.rmsnorm(y.astype(xc.dtype) * jax.nn.silu(z), lp["ln_gate"], cfg.norm_eps)
+        return xc + y @ lp["w_out"].astype(y.dtype), (cx2, cB2, cC2, st2)
+
+    x, (cx, cB, cC, st) = lax.scan(
+        body, x, (params["blocks"], cache.conv_x, cache.conv_B, cache.conv_C,
+                  cache.state))
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = L.lm_head(x, params, cfg)[:, 0]
+    return logits, SSMCache(cx, cB, cC, st, cache.pos + 1)

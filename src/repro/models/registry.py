@@ -1,0 +1,69 @@
+"""Family dispatch: decls/forward/prefill/decode for any ModelConfig."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.models import griffin, mamba2, transformer
+from repro.models.config import ModelConfig
+
+_TRANSFORMER_FAMILIES = ("dense", "moe", "audio", "vlm")
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer
+    if cfg.family == "ssm":
+        return mamba2
+    if cfg.family == "hybrid":
+        return griffin
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def decls(cfg: ModelConfig):
+    return _mod(cfg).decls(cfg)
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None):
+    return _mod(cfg).forward(params, cfg, tokens=tokens, embeds=embeds,
+                             positions=positions)
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, max_len=None):
+    return _mod(cfg).prefill(params, cfg, tokens=tokens, embeds=embeds,
+                             max_len=max_len)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    return _mod(cfg).decode_step(params, cfg, cache, tokens)
+
+
+def cache_abstract(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.KVCache.abstract(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        return mamba2.SSMCache.abstract(cfg, batch, max_len)
+    return griffin.GriffinCache.abstract(cfg, batch, max_len)
+
+
+def cache_init(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.KVCache.init(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        return mamba2.SSMCache.init(cfg, batch, max_len)
+    return griffin.GriffinCache.init(cfg, batch, max_len)
+
+
+def cache_axes(cfg: ModelConfig):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.KVCache.axes()
+    if cfg.family == "ssm":
+        return mamba2.SSMCache.axes()
+    return griffin.GriffinCache.axes()
+
+
+def uses_token_inputs(cfg: ModelConfig) -> bool:
+    """False for modality stubs whose train/prefill inputs are embeddings."""
+    return cfg.embed_inputs

@@ -1,0 +1,304 @@
+"""Decoder-only transformer family: dense / GQA / SWA / MoE / modality stubs.
+
+Structure: weights for all layers are stacked and the layer stack runs under
+``lax.scan`` (bounded HLO size, fast lowering at 80 layers) with configurable
+remat. MoE interleaving is expressed as a "superblock" of ``moe_interleave``
+layers (dense ... dense, MoE) so the scan stays homogeneous.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.sharding import axes as lx
+from repro.sharding.params import Axes, ParamDecl
+
+
+def _is_moe_layer(cfg: ModelConfig, layer_idx: int) -> bool:
+    if cfg.moe_experts < 2:
+        return False
+    return layer_idx % cfg.moe_interleave == cfg.moe_interleave - 1
+
+
+def _attn_decls(cfg: ModelConfig) -> dict[str, ParamDecl]:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "ln": L.rmsnorm_decl(d),
+        "wq": ParamDecl((d, h, hd), Axes(lx.EMBED, lx.HEADS, lx.HEAD_DIM), init="fan_in"),
+        "wk": ParamDecl((d, k, hd), Axes(lx.EMBED, lx.KV_HEADS, lx.HEAD_DIM), init="fan_in"),
+        "wv": ParamDecl((d, k, hd), Axes(lx.EMBED, lx.KV_HEADS, lx.HEAD_DIM), init="fan_in"),
+        "wo": ParamDecl((h, hd, d), Axes(lx.HEADS, lx.HEAD_DIM, lx.EMBED), init="fan_in"),
+    }
+
+
+def _layer_decls(cfg: ModelConfig, layer_idx: int) -> dict[str, Any]:
+    out: dict[str, Any] = {"attn": _attn_decls(cfg), "ln_mlp": L.rmsnorm_decl(cfg.d_model)}
+    if _is_moe_layer(cfg, layer_idx):
+        out["moe"] = L.moe_decls(cfg.d_model, cfg.d_ff, cfg.moe_experts,
+                                 cfg.mlp_type, shared=cfg.moe_shared_expert)
+    else:
+        out["mlp"] = L.mlp_decls(cfg.d_model, cfg.d_ff, cfg.mlp_type)
+    return out
+
+
+def decls(cfg: ModelConfig) -> dict[str, Any]:
+    il = cfg.moe_interleave if cfg.moe_experts >= 2 else 1
+    if cfg.n_layers % il:
+        raise ValueError(f"{cfg.name}: n_layers {cfg.n_layers} % interleave {il} != 0")
+    n_super = cfg.n_layers // il
+    superblock = {f"l{j}": _layer_decls(cfg, j) for j in range(il)}
+    from repro.sharding.params import stack_tree
+
+    tree: dict[str, Any] = {
+        "embed": L.embed_decl(cfg),
+        "blocks": stack_tree(superblock, n_super, lx.LAYERS),
+        "ln_f": L.rmsnorm_decl(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        tree["head"] = L.head_decl(cfg)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    k: jax.Array  # (L, B, S_cache, Kh, Dh)
+    v: jax.Array
+    pos: jax.Array  # scalar int32 — next position to write
+
+    @staticmethod
+    def cache_len(cfg: ModelConfig, max_len: int) -> int:
+        return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+    @staticmethod
+    def init(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> "KVCache":
+        s = KVCache.cache_len(cfg, max_len)
+        shape = (cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.resolved_head_dim)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                       jnp.zeros((), jnp.int32))
+
+    @staticmethod
+    def abstract(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> "KVCache":
+        s = KVCache.cache_len(cfg, max_len)
+        shape = (cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.resolved_head_dim)
+        return KVCache(jax.ShapeDtypeStruct(shape, dtype),
+                       jax.ShapeDtypeStruct(shape, dtype),
+                       jax.ShapeDtypeStruct((), jnp.int32))
+
+    @staticmethod
+    def axes() -> "KVCache":
+        a = Axes(lx.LAYERS, lx.DECODE_BATCH, lx.CACHE_SEQ, lx.KV_HEADS, lx.HEAD_DIM)
+        return KVCache(a, a, Axes())
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(h, p, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(h.dtype))
+    if cfg.pos_emb == "rope":
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attn_train(x, p, cfg: ModelConfig, positions):
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    q, k, v = _project_qkv(h, p, cfg, positions)
+    o = L.attention(q, k, v, impl=cfg.attn_impl, causal=True,
+                    window=cfg.sliding_window)
+    return x + jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+
+
+def _attn_decode(x, p, cfg: ModelConfig, ck, cv, pos):
+    """x: (B,1,D); ck/cv: (B,Sc,Kh,Dh). Returns (x', ck', cv')."""
+    h = L.rmsnorm(x, p["ln"], cfg.norm_eps)
+    q, k, v = _project_qkv(h, p, cfg, pos[None, None] if pos.ndim == 0 else pos)
+    s_cache = ck.shape[1]
+    slot = pos % s_cache if cfg.sliding_window else pos
+    ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, axis=1)
+    cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, axis=1)
+    kv_len = jnp.minimum(pos + 1, s_cache)
+    # decode always uses the chunked backend: dynamic kv_len + grouped KV
+    o = L.attention(q, ck, cv, impl="chunked", causal=False, window=None,
+                    kv_len=kv_len)
+    return x + jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype)), ck, cv
+
+
+def _ffn(x, lp, cfg: ModelConfig, is_moe: bool):
+    h = L.rmsnorm(x, lp["ln_mlp"], cfg.norm_eps)
+    if is_moe:
+        cast = jax.tree.map(lambda a: a.astype(x.dtype), lp["moe"])
+        o, aux = L.moe(h, cast, n_exp=cfg.moe_experts, top_k=cfg.moe_top_k,
+                       capacity_factor=cfg.moe_capacity_factor, kind=cfg.mlp_type,
+                       impl=cfg.moe_impl)
+        return x + o, aux
+    cast = jax.tree.map(lambda a: a.astype(x.dtype), lp["mlp"])
+    return x + L.mlp(h, cast, cfg.mlp_type), jnp.zeros((), jnp.float32)
+
+
+def _superblock_train(cfg: ModelConfig):
+    il = cfg.moe_interleave if cfg.moe_experts >= 2 else 1
+
+    def fn(carry, blk):
+        x, aux, positions = carry
+        for j in range(il):
+            lp = blk[f"l{j}"]
+            x = _attn_train(x, jax.tree.map(lambda a: a.astype(x.dtype), lp["attn"]),
+                            cfg, positions)
+            x, a = _ffn(x, lp, cfg, _is_moe_layer(cfg, j))
+            aux = aux + a
+        return (x, aux, positions), None
+
+    return fn
+
+
+_REMAT_POLICIES = {
+    "none": None,
+    "full": None,  # checkpoint with default policy = save nothing
+    "dots": "dots",
+}
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _embed(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None):
+    if embeds is None:
+        x = params["embed"].astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)[tokens]
+    else:
+        x = embeds
+    if cfg.pos_emb == "sinusoidal":
+        x = x + L.sinusoidal(positions, cfg.d_model).astype(x.dtype)
+    return x
+
+
+def _head(params, cfg: ModelConfig, x):
+    return L.lm_head(x, params, cfg)
+
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None,
+            positions=None) -> tuple[jax.Array, jax.Array]:
+    """Training/prefill forward. Returns (logits, moe_aux_loss)."""
+    b, s = (tokens.shape if tokens is not None else embeds.shape[:2])
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    x = _embed(params, cfg, tokens, embeds, positions)
+    body = _maybe_remat(_superblock_train(cfg), cfg)
+    (x, aux, _), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32), positions),
+                              params["blocks"])
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    return _head(params, cfg, x), aux
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, max_len: int | None = None):
+    """Run the prompt, build the KV cache. Returns (last_logits, cache)."""
+    b, s = (tokens.shape if tokens is not None else embeds.shape[:2])
+    max_len = max_len or s
+    positions = jnp.arange(s)[None, :]
+    x = _embed(params, cfg, tokens, embeds, positions)
+    il = cfg.moe_interleave if cfg.moe_experts >= 2 else 1
+    s_cache = KVCache.cache_len(cfg, max_len)
+    cdtype = jnp.bfloat16
+
+    def block(carry, blk):
+        x, aux = carry
+        ks, vs = [], []
+        for j in range(il):
+            lp = blk[f"l{j}"]
+            ap = jax.tree.map(lambda a: a.astype(x.dtype), lp["attn"])
+            h = L.rmsnorm(x, ap["ln"], cfg.norm_eps)
+            q, k, v = _project_qkv(h, ap, cfg, positions)
+            o = L.attention(q, k, v, impl=cfg.attn_impl, causal=True,
+                            window=cfg.sliding_window)
+            x = x + jnp.einsum("bshk,hkd->bsd", o, ap["wo"].astype(o.dtype))
+            x, a = _ffn(x, lp, cfg, _is_moe_layer(cfg, j))
+            aux = aux + a
+            # cache tail of K/V (ring layout when windowed)
+            if s >= s_cache:
+                tail_k, tail_v = k[:, s - s_cache:], v[:, s - s_cache:]
+                slots = (np.arange(s - s_cache, s) % s_cache)
+                ck = jnp.zeros((b, s_cache, *k.shape[2:]), cdtype).at[:, slots].set(
+                    tail_k.astype(cdtype))
+                cv = jnp.zeros((b, s_cache, *v.shape[2:]), cdtype).at[:, slots].set(
+                    tail_v.astype(cdtype))
+            else:
+                pad = s_cache - s
+                ck = jnp.pad(k.astype(cdtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+                cv = jnp.pad(v.astype(cdtype), ((0, 0), (0, pad), (0, 0), (0, 0)))
+            ks.append(ck)
+            vs.append(cv)
+        return (x, aux), (jnp.stack(ks), jnp.stack(vs))
+
+    (x, _aux), (k_all, v_all) = lax.scan(_maybe_remat(block, cfg),
+                                         (x, jnp.zeros((), jnp.float32)),
+                                         params["blocks"])
+    # (n_super, il, B, S, K, D) -> (L, B, S, K, D)
+    k_all = k_all.reshape(cfg.n_layers, *k_all.shape[2:])
+    v_all = v_all.reshape(cfg.n_layers, *v_all.shape[2:])
+    x = L.rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = _head(params, cfg, x)[:, 0]
+    cache = KVCache(k_all, v_all, jnp.asarray(s, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: KVCache, tokens):
+    """One serving step: tokens (B,1) int32 -> (logits (B,V), cache')."""
+    b = tokens.shape[0]
+    pos = cache.pos
+    x = _embed(params, cfg, tokens, None, pos[None, None])
+    il = cfg.moe_interleave if cfg.moe_experts >= 2 else 1
+    n_super = cfg.n_layers // il
+    ck = cache.k.reshape(n_super, il, *cache.k.shape[1:])
+    cv = cache.v.reshape(n_super, il, *cache.v.shape[1:])
+
+    def block(carry, blk_and_cache):
+        x, aux = carry
+        blk, ck_b, cv_b = blk_and_cache
+        ck_o, cv_o = [], []
+        for j in range(il):
+            lp = blk[f"l{j}"]
+            ap = jax.tree.map(lambda a: a.astype(x.dtype), lp["attn"])
+            x, ck_j, cv_j = _attn_decode(x, ap, cfg, ck_b[j], cv_b[j], pos)
+            x, a = _ffn(x, lp, cfg, _is_moe_layer(cfg, j))
+            aux = aux + a
+            ck_o.append(ck_j)
+            cv_o.append(cv_j)
+        return (x, aux), (jnp.stack(ck_o), jnp.stack(cv_o))
+
+    (x, _aux), (ck_new, cv_new) = lax.scan(block, (x, jnp.zeros((), jnp.float32)),
+                                           (params["blocks"], ck, cv))
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = _head(params, cfg, x)[:, 0]
+    new_cache = KVCache(ck_new.reshape(cache.k.shape), cv_new.reshape(cache.v.shape),
+                        pos + 1)
+    return logits, new_cache

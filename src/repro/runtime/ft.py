@@ -1,0 +1,154 @@
+"""Fault-tolerance runtime: heartbeats, stragglers, elastic rescale, restart.
+
+This is the pod-scale rendition of the paper's power manager + interrupt
+fabric: workers (≙ power domains) report liveness (≙ XAIF interrupts); dead
+domains are switched off (elastic downscale) and the platform keeps running.
+
+The controller is deliberately transport-agnostic (tick-driven state machine
+fed by ``report_heartbeat``/``report_step_time``) so it can be driven by a
+real coordinator service on a cluster or by a simulator in tests. Recovery
+composes with :mod:`repro.ckpt.checkpoint` (elastic restore) and the
+step-indexed data pipeline (bit-identical replay).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+import statistics
+import time
+from typing import Callable
+
+
+class WorkerState(enum.Enum):
+    HEALTHY = "healthy"
+    STRAGGLING = "straggling"
+    DEAD = "dead"
+
+
+@dataclasses.dataclass
+class WorkerInfo:
+    last_heartbeat: float = 0.0
+    state: WorkerState = WorkerState.HEALTHY
+    step_times: list = dataclasses.field(default_factory=list)
+    slow_streak: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FTConfig:
+    heartbeat_timeout_s: float = 60.0
+    straggler_factor: float = 1.5      # slower than median x this => slow
+    straggler_streak: int = 3          # consecutive slow steps => flagged
+    max_restarts: int = 5
+    backoff_base_s: float = 2.0
+    window: int = 20                   # step-time history window
+
+
+class FTController:
+    def __init__(self, n_workers: int, cfg: FTConfig = FTConfig(),
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg
+        self.clock = clock
+        self.workers = {i: WorkerInfo(last_heartbeat=clock())
+                        for i in range(n_workers)}
+        self.restarts = 0
+        self.events: list[tuple[float, str]] = []
+
+    # -- reporting -------------------------------------------------------
+    def report_heartbeat(self, worker: int):
+        w = self.workers[worker]
+        w.last_heartbeat = self.clock()
+        if w.state is WorkerState.DEAD:
+            w.state = WorkerState.HEALTHY   # rejoin (elastic upscale)
+            self._log(f"worker {worker} rejoined")
+
+    def report_step_time(self, worker: int, seconds: float):
+        w = self.workers[worker]
+        w.step_times.append(seconds)
+        if len(w.step_times) > self.cfg.window:
+            w.step_times.pop(0)
+
+    # -- detection --------------------------------------------------------
+    def tick(self) -> dict:
+        """Run detection; returns {'dead': [...], 'stragglers': [...]}"""
+        now = self.clock()
+        dead, stragglers = [], []
+        alive_times = [t for w in self.workers.values()
+                       if w.state is not WorkerState.DEAD
+                       for t in w.step_times[-1:]]
+        median = statistics.median(alive_times) if alive_times else None
+        for wid, w in self.workers.items():
+            if w.state is WorkerState.DEAD:
+                continue
+            if now - w.last_heartbeat > self.cfg.heartbeat_timeout_s:
+                w.state = WorkerState.DEAD
+                dead.append(wid)
+                self._log(f"worker {wid} declared dead (heartbeat timeout)")
+                continue
+            if median and w.step_times:
+                if w.step_times[-1] > self.cfg.straggler_factor * median:
+                    w.slow_streak += 1
+                else:
+                    w.slow_streak = 0
+                if w.slow_streak >= self.cfg.straggler_streak:
+                    if w.state is not WorkerState.STRAGGLING:
+                        self._log(f"worker {wid} flagged as straggler")
+                    w.state = WorkerState.STRAGGLING
+                    stragglers.append(wid)
+                elif w.state is WorkerState.STRAGGLING:
+                    w.state = WorkerState.HEALTHY
+        return {"dead": dead, "stragglers": stragglers}
+
+    # -- mitigation --------------------------------------------------------
+    def healthy_workers(self) -> list[int]:
+        return [i for i, w in self.workers.items()
+                if w.state is not WorkerState.DEAD]
+
+    def rescale_plan(self, mesh_shape: tuple[int, ...],
+                     axis: int = 0) -> tuple[int, ...] | None:
+        """Largest valid mesh after losing workers: shrink ``axis`` to the
+        biggest power-of-two of healthy workers (keeps divisibility for
+        checkpoint resharding). None if unchanged."""
+        alive = len(self.healthy_workers())
+        total = math.prod(mesh_shape)
+        if alive >= total:
+            return None
+        per_other = total // mesh_shape[axis]
+        new_axis = 1
+        while new_axis * 2 * per_other <= alive:
+            new_axis *= 2
+        new = list(mesh_shape)
+        new[axis] = new_axis
+        return tuple(new)
+
+    def microbatch_shares(self, n_microbatches: int) -> dict[int, int]:
+        """Straggler mitigation: stragglers get half-weight shares of the
+        next step's microbatches (work rerouted to healthy peers)."""
+        weights = {}
+        for wid, w in self.workers.items():
+            if w.state is WorkerState.DEAD:
+                continue
+            weights[wid] = 0.5 if w.state is WorkerState.STRAGGLING else 1.0
+        total_w = sum(weights.values())
+        shares = {wid: int(n_microbatches * wt / total_w)
+                  for wid, wt in weights.items()}
+        # distribute remainder to healthiest workers
+        rem = n_microbatches - sum(shares.values())
+        for wid in sorted(weights, key=lambda i: -weights[i]):
+            if rem <= 0:
+                break
+            shares[wid] += 1
+            rem -= 1
+        return shares
+
+    def restart_delay(self) -> float | None:
+        """Exponential-backoff restart policy; None when budget exhausted."""
+        if self.restarts >= self.cfg.max_restarts:
+            return None
+        delay = self.cfg.backoff_base_s * (2 ** self.restarts)
+        self.restarts += 1
+        return delay
+
+    def _log(self, msg: str):
+        self.events.append((self.clock(), msg))

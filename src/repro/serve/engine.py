@@ -1,0 +1,136 @@
+"""Serving: sharded prefill + decode steps and a batched generation engine.
+
+The decode step donates the cache (in-place HBM update — the IMC-style
+"computation mode" on resident state). Completion of a request batch is
+signaled through the XAIF interrupt analogue: a host callback the engine
+polls, mirroring the paper's accelerator end-of-computation interrupt."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.sharding import axes as lx_
+from repro.sharding import params as P
+from repro.sharding import rules as R
+
+
+@dataclasses.dataclass
+class ShardedServe:
+    prefill_fn: Any
+    decode_fn: Any
+    params_abstract: Any
+    params_shardings: Any
+    cache_abstract: Any
+    cache_shardings: Any
+    token_sharding: Any
+    logit_sharding: Any
+    raw_decode_fn: Any = None
+    raw_prefill_fn: Any = None
+
+
+def build_sharded_serve(cfg: ModelConfig, mesh: Mesh, rules: R.Rules,
+                        batch: int, max_len: int,
+                        prefill_len: int | None = None,
+                        fsdp: bool | None = None) -> ShardedServe:
+    from repro.train.trainer import _fsdp_auto
+
+    decls = registry.decls(cfg)
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    p_abs = jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+                         P.abstract_tree(decls))
+    p_axes = P.axes_tree(decls)
+    if fsdp is None:
+        fsdp = _fsdp_auto(cfg, mesh)
+    param_rules = rules if fsdp else rules.override(
+        name=rules.name + "+replicated-weights", **{lx_.EMBED: ()})
+    p_shard = R.tree_shardings(p_abs, p_axes, param_rules, mesh)
+
+    c_abs = registry.cache_abstract(cfg, batch, max_len)
+    c_axes = registry.cache_axes(cfg)
+    c_shard = R.tree_shardings(c_abs, c_axes, rules, mesh)
+
+    tok_shard = NamedSharding(mesh, R.spec_for((batch, 1), (lx_.DECODE_BATCH, None),
+                                               rules, mesh))
+    logit_shard = NamedSharding(
+        mesh, R.spec_for((batch, cfg.vocab), (lx_.DECODE_BATCH, lx_.VOCAB),
+                         rules, mesh))
+
+    def decode(params, cache, tokens):
+        return registry.decode_step(params, cfg, cache, tokens)
+
+    decode_fn = jax.jit(decode,
+                        in_shardings=(p_shard, c_shard, tok_shard),
+                        out_shardings=(logit_shard, c_shard),
+                        donate_argnums=(1,))
+
+    prefill_fn = None
+    if prefill_len:
+        if cfg.embed_inputs:
+            in_abs = jax.ShapeDtypeStruct((batch, prefill_len), jnp.int32)
+            in_shard = NamedSharding(
+                mesh, R.spec_for(in_abs.shape, (lx_.DECODE_BATCH, lx_.SEQ),
+                                 rules, mesh))
+
+            def pf(params, tokens):
+                return registry.prefill(params, cfg, tokens=tokens, max_len=max_len)
+        else:
+            in_abs = jax.ShapeDtypeStruct((batch, prefill_len, cfg.d_model),
+                                          jnp.bfloat16)
+            in_shard = NamedSharding(
+                mesh, R.spec_for(in_abs.shape,
+                                 (lx_.DECODE_BATCH, lx_.SEQ, lx_.EMBED),
+                                 rules, mesh))
+
+            def pf(params, embeds):
+                return registry.prefill(params, cfg, embeds=embeds, max_len=max_len)
+
+        prefill_fn = jax.jit(pf, in_shardings=(p_shard, in_shard),
+                             out_shardings=(logit_shard, c_shard))
+        prefill_fn._input_abstract = in_abs  # used by the dry-run
+
+    return ShardedServe(prefill_fn, decode_fn, p_abs, p_shard, c_abs, c_shard,
+                        tok_shard, logit_shard,
+                        raw_decode_fn=decode,
+                        raw_prefill_fn=pf if prefill_len else None)
+
+
+# ---------------------------------------------------------------------------
+# Simple engine loop (examples / CPU-scale serving)
+# ---------------------------------------------------------------------------
+
+
+class Engine:
+    """Greedy batched generation with an interrupt-style completion callback."""
+
+    def __init__(self, cfg: ModelConfig, params, mesh: Mesh, rules: R.Rules,
+                 batch: int, max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.sv = build_sharded_serve(cfg, mesh, rules, batch, max_len,
+                                      prefill_len=None)
+        self.batch = batch
+        self.max_len = max_len
+
+    def generate(self, prompt_tokens, steps: int, on_complete=None):
+        cache = registry.cache_init(self.cfg, self.batch, self.max_len)
+        toks = prompt_tokens
+        out = []
+        # teacher-forced prompt consumption (simple engine: token-by-token)
+        for t in range(prompt_tokens.shape[1]):
+            logits, cache = self.sv.decode_fn(self.params, cache, toks[:, t:t + 1])
+        nxt = jnp.argmax(logits, -1)[:, None]
+        for _ in range(steps):
+            out.append(nxt)
+            logits, cache = self.sv.decode_fn(self.params, cache, nxt)
+            nxt = jnp.argmax(logits, -1)[:, None]
+        result = jnp.concatenate(out, axis=1)
+        if on_complete is not None:
+            on_complete(result)   # XAIF interrupt analogue
+        return result

@@ -1,0 +1,172 @@
+"""Logical-axis -> mesh-axis rule engine.
+
+The engine is the software analogue of the X-HEEP bus/addressing-mode
+configuration (paper §III-A3): the same model code is laid out on the machine
+according to a small declarative table, and changing the table is the whole
+configuration act — no model-code fork, mirroring XAIF's no-RTL-fork property.
+
+Robustness properties (unit- and property-tested):
+
+* divisibility fallback — a logical dim whose size does not divide the mesh
+  axes assigned to it is silently replicated instead of failing to lower;
+* no mesh axis is used twice within one PartitionSpec;
+* unknown logical names map to replication.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.sharding import axes as lax_
+
+
+MeshAxes = tuple[str, ...]
+
+
+def _as_tuple(v) -> MeshAxes:
+    if v is None:
+        return ()
+    if isinstance(v, str):
+        return (v,)
+    return tuple(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """A mapping from logical axis names to mesh axis tuples."""
+
+    table: Mapping[str, MeshAxes]
+    name: str = "custom"
+
+    def lookup(self, logical: str | None) -> MeshAxes:
+        if logical is None:
+            return ()
+        return _as_tuple(self.table.get(logical, ()))
+
+    def override(self, name: str | None = None, **updates) -> "Rules":
+        t = dict(self.table)
+        for k, v in updates.items():
+            t[k] = _as_tuple(v)
+        return Rules(t, name or self.name)
+
+
+def fully_connected(mesh: Mesh) -> Rules:
+    """The 'fully-connected bus' preset: DP/FSDP over (pod, data), TP/EP over
+    model, sequence parallelism for long-context activations."""
+    has_pod = "pod" in mesh.axis_names
+    batch = ("pod", "data") if has_pod else ("data",)
+    return Rules(
+        {
+            lax_.BATCH: batch,
+            lax_.DECODE_BATCH: batch,
+            lax_.SEQ: (),
+            # decode-time context parallelism: KV cache sharded along its
+            # sequence axis over `model` (GQA kv-head counts rarely divide it)
+            lax_.CACHE_SEQ: ("model",),
+            # FSDP: parameter/optimizer d_model dim sharded over `data`
+            # (ZeRO-3): without it the ≥300B configs cannot fit 16 GiB HBM.
+            # Activations are unaffected (batch claims `data` first).
+            lax_.EMBED: ("data",),
+            lax_.MLP: ("model",),
+            lax_.HEADS: ("model",),
+            lax_.KV_HEADS: ("model",),
+            lax_.VOCAB: ("model",),
+            lax_.EXPERT: ("model",),
+            lax_.RNN_WIDTH: ("model",),
+            lax_.FSDP: ("data",),
+        },
+        name="fully_connected",
+    )
+
+
+def one_at_a_time(mesh: Mesh) -> Rules:
+    """The paper-faithful minimal-bus baseline: a single master at a time.
+
+    Only data parallelism over one axis; parameters replicated. Matches the
+    paper's one-at-a-time topology, whose bandwidth is flat no matter how many
+    ports exist (Fig. 2b) — on the pod this manifests as all-reduce-everything
+    with replicated memory, the starting point the optimized layouts beat.
+    """
+    has_pod = "pod" in mesh.axis_names
+    batch = ("pod", "data") if has_pod else ("data",)
+    return Rules(
+        {lax_.BATCH: batch, lax_.DECODE_BATCH: batch},
+        name="one_at_a_time",
+    )
+
+
+PRESETS = {"fully_connected": fully_connected, "one_at_a_time": one_at_a_time}
+
+
+def _mesh_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for(
+    shape: Sequence[int],
+    logical: Sequence[str | None],
+    rules: Rules,
+    mesh: Mesh,
+) -> PartitionSpec:
+    """Build a PartitionSpec for one array, with divisibility fallback."""
+    if len(shape) != len(logical):
+        raise ValueError(f"shape {shape} vs logical axes {logical} rank mismatch")
+    sizes = _mesh_sizes(mesh)
+    used: set[str] = set()
+    out: list[Any] = []
+    for dim, name in zip(shape, logical):
+        assigned = rules.lookup(name)
+        if name in lax_.UNSHARDED:
+            assigned = ()
+        keep: list[str] = []
+        prod = 1
+        for ax in assigned:
+            if ax in used or ax not in sizes:
+                continue
+            if dim % (prod * sizes[ax]) != 0:
+                continue
+            keep.append(ax)
+            prod *= sizes[ax]
+        used.update(keep)
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def tree_specs(abstract: Any, axes_tree: Any, rules: Rules, mesh: Mesh) -> Any:
+    """Map a pytree of ShapeDtypeStructs + a matching tree of Axes leaves to a
+    tree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda a, ax: spec_for(a.shape, tuple(ax), rules, mesh),
+        abstract,
+        axes_tree,
+    )
+
+
+def tree_shardings(abstract: Any, axes_tree: Any, rules: Rules, mesh: Mesh) -> Any:
+    specs = tree_specs(abstract, axes_tree, rules, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def shard_bytes(shape: Sequence[int], spec: PartitionSpec, mesh: Mesh,
+                dtype_bytes: int) -> int:
+    """Per-device bytes of an array under a spec (for memory napkin math)."""
+    sizes = _mesh_sizes(mesh)
+    n = math.prod(shape) if shape else 1
+    denom = 1
+    for entry in spec:
+        for ax in _as_tuple(entry):
+            denom *= sizes.get(ax, 1)
+    return int(n * dtype_bytes / max(denom, 1))

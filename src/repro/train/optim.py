@@ -1,0 +1,237 @@
+"""Optimizers built from scratch (no optax): AdamW, Adafactor, Lion.
+
+Each optimizer exposes ``init/update/axes`` — ``axes`` maps the parameter
+logical-axes tree to the state's logical axes, so optimizer state shards
+exactly like (or factored from) its parameters: ZeRO-style partitioning falls
+out of the same rule engine that shards the model.
+
+Mixed precision: parameters live in bf16; AdamW/Lion keep an fp32 master copy
+in the state. Adafactor (used for the ≥70 B configs) keeps factored fp32
+second moments and, by default, an fp32 master as well (disable with
+``master=False`` to halve state bytes at the cost of bf16 update noise).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.params import Axes
+
+F32 = jnp.float32
+
+
+def _tree_map(f, *trees, **kw):
+    return jax.tree.map(f, *trees, **kw)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(F32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return _tree_map(lambda g: (g.astype(F32) * scale).astype(g.dtype), grads), norm
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """``update(grads, state, params, lr) -> (new_params, new_state, metrics)``
+    with ``new_state`` structurally identical to ``init(params)`` (donation-
+    safe across steps)."""
+
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any, dict]]
+    axes: Callable[[Any], Any]   # param axes tree -> state axes tree
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip: float = 1.0) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "master": _tree_map(lambda p: p.astype(F32), params),
+            "m": _tree_map(lambda p: jnp.zeros(p.shape, F32), params),
+            "v": _tree_map(lambda p: jnp.zeros(p.shape, F32), params),
+        }
+
+    def update(grads, state, params, lr):
+        if clip:
+            grads, gnorm = clip_by_global_norm(grads, clip)
+        else:
+            gnorm = global_norm(grads)
+        step = state["step"] + 1
+        t = step.astype(F32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, master):
+            g = g.astype(F32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            master = master - lr * (u + weight_decay * master)
+            return m, v, master
+
+        out = _tree_map(upd, grads, state["m"], state["v"], state["master"])
+        m = _tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = _tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        master = _tree_map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = _tree_map(lambda mp, p: mp.astype(p.dtype), master, params)
+        return new_params, {"step": step, "master": master, "m": m, "v": v}, \
+            {"grad_norm": gnorm}
+
+    def axes(param_axes):
+        return {
+            "step": Axes(),
+            "master": param_axes,
+            "m": param_axes,
+            "v": param_axes,
+        }
+
+    return Optimizer("adamw", init, update, axes)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; memory ~O(rows+cols) for matrices)
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 2 and shape[-2] >= 2
+
+
+def adafactor(eps: float = 1e-30, clip_thresh: float = 1.0,
+              decay: float = 0.8, weight_decay: float = 0.0,
+              master: bool = True) -> Optimizer:
+    def init(params):
+        def vr(p):
+            return (jnp.zeros(p.shape[:-1], F32) if _factored(p.shape)
+                    else jnp.zeros(p.shape, F32))
+
+        def vc(p):
+            return (jnp.zeros((*p.shape[:-2], p.shape[-1]), F32)
+                    if _factored(p.shape) else jnp.zeros((1,), F32))
+
+        st = {
+            "step": jnp.zeros((), jnp.int32),
+            "vr": _tree_map(vr, params),
+            "vc": _tree_map(vc, params),
+        }
+        if master:
+            st["master"] = _tree_map(lambda p: p.astype(F32), params)
+        return st
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        beta = 1.0 - (step.astype(F32) + 1.0) ** (-decay)
+
+        def upd(g, vr, vc, p, mstr):
+            g = g.astype(F32)
+            g2 = g * g + eps
+            if _factored(g.shape):
+                vr2 = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                vc2 = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr2 / jnp.maximum(vr2.mean(axis=-1, keepdims=True), eps))
+                cfac = jax.lax.rsqrt(vc2)
+                u = g * rfac[..., None] * cfac[..., None, :]
+            else:
+                vr2 = beta * vr + (1 - beta) * g2
+                vc2 = vc
+                u = g * jax.lax.rsqrt(vr2)
+            # update clipping (RMS <= clip_thresh)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_thresh)
+            base = mstr if mstr is not None else p.astype(F32)
+            new = base - lr * (u + weight_decay * base)
+            return vr2, vc2, new
+
+        leaves_g, tdef = jax.tree.flatten(grads)
+        leaves_vr = tdef.flatten_up_to(state["vr"])
+        leaves_vc = tdef.flatten_up_to(state["vc"])
+        leaves_p = tdef.flatten_up_to(params)
+        leaves_m = (tdef.flatten_up_to(state["master"]) if "master" in state
+                    else [None] * len(leaves_g))
+        outs = [upd(g, vr, vc, p, m) for g, vr, vc, p, m in
+                zip(leaves_g, leaves_vr, leaves_vc, leaves_p, leaves_m)]
+        vr = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        vc = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        new_master = jax.tree.unflatten(tdef, [o[2] for o in outs])
+        new_params = _tree_map(lambda mp, p: mp.astype(p.dtype), new_master, params)
+        st = {"step": step, "vr": vr, "vc": vc}
+        if "master" in state:
+            st["master"] = new_master
+        return new_params, st, {"grad_norm": global_norm(grads)}
+
+    def axes(param_axes):
+        def vr_ax(a):
+            dims = tuple(a)
+            return Axes(*dims[:-1]) if len(dims) >= 2 else Axes(*dims)
+
+        def vc_ax(a):
+            dims = tuple(a)
+            return Axes(*dims[:-2], dims[-1]) if len(dims) >= 2 else Axes(None)
+
+        st = {
+            "step": Axes(),
+            "vr": _tree_map(vr_ax, param_axes),
+            "vc": _tree_map(vc_ax, param_axes),
+        }
+        if master:
+            st["master"] = param_axes
+        return st
+
+    return Optimizer("adafactor", init, update, axes)
+
+
+# ---------------------------------------------------------------------------
+# Lion
+# ---------------------------------------------------------------------------
+
+
+def lion(b1: float = 0.9, b2: float = 0.99, weight_decay: float = 0.1,
+         clip: float = 1.0) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "master": _tree_map(lambda p: p.astype(F32), params),
+            "m": _tree_map(lambda p: jnp.zeros(p.shape, F32), params),
+        }
+
+    def update(grads, state, params, lr):
+        if clip:
+            grads, _ = clip_by_global_norm(grads, clip)
+
+        def upd(g, m, master):
+            g = g.astype(F32)
+            u = jnp.sign(b1 * m + (1 - b1) * g)
+            m2 = b2 * m + (1 - b2) * g
+            master2 = master - lr * (u + weight_decay * master)
+            return m2, master2
+
+        out = _tree_map(upd, grads, state["m"], state["master"])
+        m = _tree_map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        master = _tree_map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_params = _tree_map(lambda mp, p: mp.astype(p.dtype), master, params)
+        return new_params, {"step": state["step"] + 1, "master": master, "m": m}, {}
+
+    def axes(param_axes):
+        return {"step": Axes(), "master": param_axes, "m": param_axes}
+
+    return Optimizer("lion", init, update, axes)
+
+
+def get(name: str, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "lion": lion}[name](**kw)

@@ -1,0 +1,29 @@
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
+
+
+def run_subprocess(code: str, devices: int = 1, timeout: int = 420):
+    """Run python code in a fresh process with N host devices (for
+    multi-device tests — the main test process keeps 1 device)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC)
+    if devices > 1:
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise AssertionError(f"subprocess failed:\nSTDOUT:\n{out.stdout}\n"
+                             f"STDERR:\n{out.stderr}")
+    return out.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_subprocess

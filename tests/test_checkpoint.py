@@ -1,0 +1,96 @@
+"""Checkpoint roundtrip, atomicity, bf16, async, elastic resharding."""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint
+
+
+def tree(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "a": jax.random.normal(k, (4, 8), jnp.float32),
+        "nested": {"b": jax.random.normal(k, (3,), jnp.bfloat16),
+                   "c": jnp.arange(5, dtype=jnp.int32)},
+    }
+
+
+def assert_tree_equal(x, y):
+    for a, b in zip(jax.tree.leaves(x), jax.tree.leaves(y)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    checkpoint.save(tmp_path, t, step=7)
+    got, step, meta = checkpoint.restore(tmp_path, t)
+    assert step == 7
+    assert_tree_equal(t, got)
+    assert got["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_latest_step_and_multiple(tmp_path):
+    t = tree()
+    checkpoint.save(tmp_path, t, step=1)
+    checkpoint.save(tmp_path, t, step=5)
+    assert checkpoint.latest_step(tmp_path) == 5
+
+
+def test_async_save(tmp_path):
+    t = tree()
+    h = checkpoint.save(tmp_path, t, step=3, async_=True)
+    h.join()
+    got, step, _ = checkpoint.restore(tmp_path, t)
+    assert step == 3
+    assert_tree_equal(t, got)
+
+
+def test_structure_mismatch_raises(tmp_path):
+    checkpoint.save(tmp_path, tree(), step=1)
+    with pytest.raises(ValueError, match="mismatch"):
+        checkpoint.restore(tmp_path, {"different": jnp.zeros(3)})
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    # simulate crash: .tmp dir left behind must not count as a checkpoint
+    t = tree()
+    checkpoint.save(tmp_path, t, step=2)
+    (tmp_path / ".tmp_step_000000009").mkdir()
+    assert checkpoint.latest_step(tmp_path) == 2
+
+
+def test_metadata_roundtrip(tmp_path):
+    checkpoint.save(tmp_path, tree(), step=1, metadata={"arch": "granite"})
+    _, _, meta = checkpoint.restore(tmp_path, tree())
+    assert meta["arch"] == "granite"
+
+
+def test_elastic_resharding_across_meshes(subproc, tmp_path):
+    """Save sharded on a (2,4) mesh, restore onto (4,2) and (1,1)."""
+    code = f"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.ckpt import checkpoint
+from repro.launch.mesh import make_mesh
+
+t = {{"w": jnp.arange(8*16, dtype=jnp.float32).reshape(8, 16)}}
+mesh_a = make_mesh((2, 4), ("data", "model"))
+sh_a = {{"w": NamedSharding(mesh_a, P("data", "model"))}}
+t_a = jax.tree.map(jax.device_put, t, sh_a)
+checkpoint.save(r"{tmp_path}", t_a, step=1)
+
+mesh_b = make_mesh((4, 2), ("data", "model"))
+sh_b = {{"w": NamedSharding(mesh_b, P("model", "data"))}}
+got, step, _ = checkpoint.restore(r"{tmp_path}", t, shardings=sh_b)
+np.testing.assert_array_equal(np.asarray(got["w"]), np.asarray(t["w"]))
+got1, _, _ = checkpoint.restore(r"{tmp_path}", t)
+np.testing.assert_array_equal(np.asarray(got1["w"]), np.asarray(t["w"]))
+print("ELASTIC_OK")
+"""
+    out = subproc(code, devices=8)
+    assert "ELASTIC_OK" in out

@@ -1,0 +1,189 @@
+"""Per-kernel allclose sweeps vs the ref.py pure-jnp oracles (interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401  (XAIF registration)
+
+RNG = np.random.default_rng(7)
+
+
+def t(*shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # B, S, H, K, D, window, causal
+    (2, 64, 4, 2, 16, None, True),
+    (1, 48, 4, 4, 48, None, True),     # MHA, unaligned D
+    (2, 40, 8, 2, 16, 24, True),       # SWA, ragged S
+    (1, 96, 4, 1, 64, None, False),    # MQA, non-causal
+    (2, 64, 4, 2, 120, None, True),    # danube-style head_dim 120
+]
+
+
+@pytest.mark.parametrize("b,s,h,k,d,win,causal", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(b, s, h, k, d, win, causal, dtype):
+    from repro.kernels.attention import ops, ref
+
+    q, kk, vv = t(b, s, h, d, dtype=dtype), t(b, s, k, d, dtype=dtype), \
+        t(b, s, k, d, dtype=dtype)
+    want = ref.attention(q, kk, vv, causal=causal, window=win)
+    got = ops.flash_attention(q, kk, vv, causal=causal, window=win,
+                              q_block=16, kv_block=16)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_chunked_vjp_matches_ref_grads():
+    from repro.models import layers as L
+
+    q, k, v = t(2, 64, 4, 16), t(2, 64, 2, 16), t(2, 64, 2, 16)
+
+    def loss_ref(q, k, v):
+        return (L.attention_ref(q, k, v, causal=True) ** 2).sum()
+
+    def loss_new(q, k, v):
+        return (L.attention_chunked(q, k, v, causal=True,
+                                    q_block=16, kv_block=16) ** 2).sum()
+
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    gn = jax.grad(loss_new, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gr, gn):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    (2, 64, 4, 16, 16, 16),
+    (1, 128, 2, 32, 8, 32),
+    (2, 32, 8, 8, 64, 8),
+]
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", SSD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_kernel_vs_ref(b, s, h, p, n, chunk, dtype):
+    from repro.kernels.ssd import ops, ref
+
+    x = t(b, s, h, p, dtype=dtype, scale=0.5)
+    dA = -jnp.abs(t(b, s, h, scale=0.1))
+    B_, C_ = t(b, s, h, n, scale=0.3), t(b, s, h, n, scale=0.3)
+    y_ref, st_ref = ref.ssd(x.astype(jnp.float32), dA, B_, C_)
+    y, st = ops.ssd(x, dA, B_, C_, chunk=chunk)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               atol=tol, rtol=tol)
+
+
+def test_ssd_chunked_jnp_matches_ref():
+    from repro.models.mamba2 import ssd_chunked, ssd_ref
+
+    b, s, h, p, n = 2, 96, 4, 16, 16
+    x = t(b, s, h, p, scale=0.5)
+    dA = -jnp.abs(t(b, s, h, scale=0.1))
+    B_, C_ = t(b, s, h, n, scale=0.3), t(b, s, h, n, scale=0.3)
+    y1, s1 = ssd_ref(x, dA, B_, C_)
+    y2, s2 = ssd_chunked(x, dA, B_, C_, chunk=32)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s1), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,w", [(2, 64, 32), (1, 128, 128), (3, 32, 64)])
+def test_rglru_kernel_vs_ref(b, s, w):
+    from repro.kernels.rglru import ops, ref
+
+    a = jnp.clip(jnp.abs(t(b, s, w, scale=0.3)), 0, 0.95)
+    bb = t(b, s, w, scale=0.5)
+    y_ref, h_ref = ref.rglru(a, bb)
+    y, h = ops.rglru(a, bb)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-5)
+
+
+def test_rglru_assoc_scan_matches_ref():
+    from repro.models.griffin import linear_scan_assoc, linear_scan_ref
+
+    a = jnp.clip(jnp.abs(t(2, 64, 16, scale=0.3)), 0, 0.95)
+    b = t(2, 64, 16, scale=0.5)
+    h0 = t(2, 16, scale=0.5)
+    y1, hf1 = linear_scan_ref(a, b, h0)
+    y2, hf2 = linear_scan_assoc(a, b, h0)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y1), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hf2), np.asarray(hf1), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MoE grouped matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,c,d,f", [(4, 16, 32, 64), (2, 128, 64, 128),
+                                     (8, 8, 16, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_vs_ref(e, c, d, f, dtype):
+    from repro.kernels.moe import ref
+    from repro.kernels.moe.kernel import grouped_matmul
+
+    x, w = t(e, c, d, dtype=dtype, scale=0.3), t(e, d, f, dtype=dtype, scale=0.3)
+    want = ref.grouped_matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    got = grouped_matmul(x, w, c_block=min(8, c), f_block=min(16, f),
+                         d_block=min(16, d))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+def test_moe_ffn_pallas_vs_ref():
+    from repro.kernels.moe import ops, ref
+
+    xg = t(4, 16, 32, scale=0.4)
+    p = {"w_gate": t(4, 32, 64, scale=0.1), "w_up": t(4, 32, 64, scale=0.1),
+         "w_down": t(4, 64, 32, scale=0.1)}
+    np.testing.assert_allclose(np.asarray(ops.moe_ffn(xg, p)),
+                               np.asarray(ref.moe_ffn(xg, p)), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# conv1d ("CGRA")
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,d,w", [(2, 64, 32, 4), (1, 256, 128, 4),
+                                     (3, 32, 16, 2), (1, 64, 64, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv1d_kernel_vs_ref(b, s, d, w, dtype):
+    from repro.kernels.conv1d import ops, ref
+
+    x = t(b, s, d, dtype=dtype)
+    ww = t(w, d, scale=0.4, dtype=dtype)
+    want = ref.conv1d(x.astype(jnp.float32), ww.astype(jnp.float32))
+    got = ops.conv1d(x, ww)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+def test_xaif_registry_has_all_kernels():
+    from repro.core.xaif import REGISTRY
+
+    for op in ("attention", "ssd", "rglru", "moe_ffn", "conv1d"):
+        assert "pallas" in REGISTRY.impls(op), op
+        spec = REGISTRY.get(op, "pallas")
+        assert spec.master_ports, f"{op} needs master ports"
+        assert spec.power_domain is not None

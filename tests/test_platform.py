@@ -1,0 +1,88 @@
+"""Platform / XAIF behaviour: config validation, dispatch, plug-in attach."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core.platform import CORE_BACKEND, Platform, XHeepConfig
+from repro.core.power import PowerDomain, PowerState
+from repro.core.xaif import AcceleratorSpec, PortSpec, XaifRegistry
+from repro.sharding.params import Axes
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        XHeepConfig(core="cortex-m4")
+    with pytest.raises(ValueError):
+        XHeepConfig(bus="token-ring")
+    with pytest.raises(ValueError):
+        XHeepConfig(addressing="random")
+    with pytest.raises(ValueError):
+        XHeepConfig(n_banks=0)
+
+
+def test_core_selects_backend():
+    assert CORE_BACKEND["cv32e20"] == "ref"
+    assert CORE_BACKEND["cv32e40x"] == "chunked"
+    assert CORE_BACKEND["cv32e40p"] == "pallas"
+
+
+def test_registry_dispatch_and_override():
+    reg = XaifRegistry()
+    spec = AcceleratorSpec(name="x", op="myop", impl="ref",
+                           fn=lambda a: a + 1)
+    reg.register(spec)
+    assert reg.dispatch("myop", "ref", 41) == 42
+    with pytest.raises(ValueError):
+        reg.register(spec)                      # duplicate
+    reg.register(spec, allow_override=True)     # explicit override ok
+    with pytest.raises(KeyError):
+        reg.get("myop", "pallas")
+
+
+def test_platform_attach_joins_power_manager():
+    platform = Platform(XHeepConfig(), registry=XaifRegistry())
+    spec = AcceleratorSpec(
+        name="keccak", op="hash", impl="pallas", fn=lambda x: x,
+        master_ports=(PortSpec("data", Axes(None)),),
+        power_domain=PowerDomain("keccak", leak_uw=3.0),
+    )
+    platform.attach(spec)
+    assert "keccak" in platform.power.domains
+    assert platform.accelerators[0].bus_width_bits == 32
+    platform.power.set_state("keccak", PowerState.OFF)
+    assert not platform.power.is_active("keccak")
+
+
+def test_impl_for_prefers_override_then_core_then_ref():
+    reg = XaifRegistry()
+    reg.register(AcceleratorSpec(name="a", op="attention", impl="pallas",
+                                 fn=lambda: None))
+    p = Platform(XHeepConfig(core="cv32e40p"), registry=reg)
+    assert p.impl_for("attention") == "pallas"
+    p2 = Platform(XHeepConfig(core="cv32e20"), registry=reg)
+    assert p2.impl_for("attention") == "ref"
+    p3 = Platform(XHeepConfig(core="cv32e20", op_impls={"attention": "pallas"}),
+                  registry=reg)
+    assert p3.impl_for("attention") == "pallas"
+
+
+def test_cgra_port_structure_matches_paper():
+    """Paper §IV-A2: CGRA = 2 slave ports + 4 master ports = 128 bit/cycle."""
+    import repro.kernels  # noqa: F401
+    from repro.core.xaif import REGISTRY
+
+    cgra = REGISTRY.get("conv1d", "pallas")
+    assert len(cgra.slave_ports) == 2
+    assert len(cgra.master_ports) == 4
+    assert cgra.bus_width_bits == 128
+    assert cgra.power_domain.name == "cgra"
+
+
+def test_bus_presets():
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh()
+    fc = Platform(XHeepConfig(bus="fully_connected")).rules(mesh)
+    oat = Platform(XHeepConfig(bus="one_at_a_time")).rules(mesh)
+    assert fc.lookup("mlp") == ("model",)
+    assert oat.lookup("mlp") == ()
