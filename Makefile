@@ -1,0 +1,19 @@
+# Developer entry points. All targets run on CPU with the in-repo sources.
+#
+#   make test-fast    fast tier (tier-1 gate candidates, < 1 min): -m "not slow"
+#   make test-all     full suite including subprocess multi-device + sweeps
+#   make bench-serve  arrivals-trace serving benchmark (continuous vs sequential)
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test-fast test-all bench-serve
+
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+test-all:
+	$(PY) -m pytest -x -q
+
+bench-serve:
+	$(PY) benchmarks/serve_bench.py --requests 16 --slots 4 --gap 2.0 --new-tokens 8

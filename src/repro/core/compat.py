@@ -1,0 +1,66 @@
+"""Version-compat shims for the jax API surface we depend on.
+
+The repo targets the jax_pallas image (jax 0.4.37 today) but uses a few
+APIs whose location moved across jax releases:
+
+* ``jax.sharding.AxisType`` (explicit/auto axis types) only exists on
+  jax >= 0.5; on older jax every mesh axis is implicitly "auto", so the
+  equivalent is simply not passing ``axis_types``.
+* ``jax.make_mesh`` grew its ``axis_types`` keyword at the same time.
+* ``shard_map`` lived in ``jax.experimental.shard_map`` before being
+  promoted to ``jax.shard_map``.
+
+Everything that needs one of these goes through this module so no other
+file hard-references a version-specific attribute.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# -- axis types --------------------------------------------------------------
+
+AxisType = getattr(jax.sharding, "AxisType", None)
+HAS_AXIS_TYPES = AxisType is not None
+
+
+def axis_types_auto(n: int):
+    """``(AxisType.Auto,) * n`` on new jax, ``None`` (implicit auto) on old."""
+    if HAS_AXIS_TYPES:
+        return (AxisType.Auto,) * n
+    return None
+
+
+def make_mesh(shape, axes, *, devices=None):
+    """``jax.make_mesh`` with auto axis types wherever the API allows them."""
+    shape, axes = tuple(shape), tuple(axes)
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if HAS_AXIS_TYPES:
+        kwargs["axis_types"] = axis_types_auto(len(axes))
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
+def axis_size(axis_name):
+    """``lax.axis_size`` (jax >= 0.5); older jax spells it ``psum(1, axis)``
+    (constant-folded to the static mesh-axis size)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+# -- shard_map ---------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.6: experimental location, and the replication-check kwarg
+    # is still called check_rep there (renamed to check_vma later)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f=None, /, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        if f is None:
+            return lambda g: _shard_map(g, **kwargs)
+        return _shard_map(f, **kwargs)

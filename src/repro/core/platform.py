@@ -70,16 +70,60 @@ class Platform:
             + [PowerDomain(f"bank{i}", leak_uw=0.0, retainable=True)
                for i in range(self.config.n_banks)]
         )
+        self.interrupts = xaif.InterruptController()
         self._attached: list[xaif.AcceleratorSpec] = []
+        self._added_domains: set[str] = set()   # domains attach() created
+        self._bank_refs: dict[str, int] = {}    # shared bank occupancy
 
     # -- XAIF attach ---------------------------------------------------------
     def attach(self, spec: xaif.AcceleratorSpec) -> None:
-        """Plug an accelerator in: register fn + join the power manager."""
+        """Plug an accelerator in: register fn + join the power manager.
+
+        Re-attaching (same op/impl) replaces the registration but joins the
+        power manager exactly once — the power port is level-, not
+        edge-attached.
+        """
         self.registry.register(spec, allow_override=True)
         if spec.power_domain is not None:
             if spec.power_domain.name not in self.power.domains:
                 self.power.add_domain(spec.power_domain)
+                self._added_domains.add(spec.power_domain.name)
+        replaced = [s for s in self._attached
+                    if (s.op, s.impl) == (spec.op, spec.impl)]
+        self._attached = [s for s in self._attached
+                          if (s.op, s.impl) != (spec.op, spec.impl)]
         self._attached.append(spec)
+        # a replaced spec's domain must not linger and leak — but only
+        # domains attach() itself created are ours to remove (a spec naming
+        # a platform built-in like "bank0" must never delete it)
+        for old in replaced:
+            if old.power_domain is None:
+                continue
+            name = old.power_domain.name
+            still_used = any(
+                s.power_domain is not None and s.power_domain.name == name
+                for s in self._attached)
+            if not still_used and name in self._added_domains:
+                self.power.remove_domain(name)
+                self._added_domains.discard(name)
+
+    # -- shared bank occupancy (engines and pipelines co-own the pool) --------
+    def bank_acquire(self, name: str) -> None:
+        """Refcounted wake: the first user of an idle bank powers it on."""
+        refs = self._bank_refs.get(name, 0)
+        if refs == 0:
+            self.power.wake(name)
+        self._bank_refs[name] = refs + 1
+
+    def bank_release(self, name: str) -> None:
+        """Refcounted gate: the last user leaving an idle bank clock-gates
+        it. Gating never fires while any other holder is live."""
+        refs = self._bank_refs.get(name, 0)
+        if refs <= 0:
+            raise ValueError(f"bank {name!r} released more than acquired")
+        self._bank_refs[name] = refs - 1
+        if self._bank_refs[name] == 0:
+            self.power.clock_gate(name)
 
     @property
     def accelerators(self) -> list[xaif.AcceleratorSpec]:

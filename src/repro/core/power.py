@@ -77,6 +77,13 @@ class PowerManager:
         self.domains[domain.name] = domain
         self.states[domain.name] = PowerState.ON
 
+    def remove_domain(self, name: str) -> None:
+        """Detach a power port (accelerator unplugged / spec replaced)."""
+        if name not in self.domains:
+            raise KeyError(name)
+        del self.domains[name]
+        del self.states[name]
+
     def set_state(self, name: str, state: PowerState) -> None:
         if name not in self.domains:
             raise KeyError(name)
@@ -91,6 +98,17 @@ class PowerManager:
     def all_on(self) -> None:
         for n in self.states:
             self.states[n] = PowerState.ON
+
+    def state(self, name: str) -> PowerState:
+        if name not in self.states:
+            raise KeyError(name)
+        return self.states[name]
+
+    def wake(self, name: str) -> None:
+        self.set_state(name, PowerState.ON)
+
+    def clock_gate(self, name: str) -> None:
+        self.set_state(name, PowerState.CLOCK_GATED)
 
     def is_active(self, name: str) -> bool:
         return self.states[name] in (PowerState.ON, PowerState.CLOCK_GATED)

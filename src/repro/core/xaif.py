@@ -64,6 +64,40 @@ class AcceleratorSpec:
         return 32 * len(self.master_ports)
 
 
+class InterruptController:
+    """The platform's interrupt fabric (paper: PLIC + fast interrupts).
+
+    Accelerators and the serving engine raise *lines* by name; the host
+    (or any observer) connects handlers per line. Firing a line with no
+    handler is not an error — the event is still counted, mirroring a
+    masked interrupt that stays pending in the controller.
+    """
+
+    def __init__(self):
+        self._handlers: dict[str, list[Callable[..., Any]]] = {}
+        self.counts: dict[str, int] = {}
+
+    def lines(self) -> list[str]:
+        return sorted(set(self._handlers) | set(self.counts))
+
+    def connect(self, line: str, handler: Callable[..., Any]) -> None:
+        self._handlers.setdefault(line, []).append(handler)
+
+    def disconnect(self, line: str, handler: Callable[..., Any]) -> None:
+        self._handlers.get(line, []).remove(handler)
+
+    def fire(self, line: str, payload: Any = None) -> int:
+        """Raise ``line``; returns the number of handlers that ran."""
+        self.counts[line] = self.counts.get(line, 0) + 1
+        handlers = list(self._handlers.get(line, ()))
+        for h in handlers:
+            h(payload)
+        return len(handlers)
+
+    def count(self, line: str) -> int:
+        return self.counts.get(line, 0)
+
+
 class XaifRegistry:
     """op name -> impl name -> accelerator. The platform's plug-in socket."""
 

@@ -3,31 +3,32 @@
 Defined as FUNCTIONS (never module-level constants) so importing this module
 never touches jax device state — required for the dry-run's host-device
 override to land before first jax initialization.
+
+All meshes are built through :mod:`repro.core.compat` so the module works on
+jax versions with and without ``jax.sharding.AxisType``.
 """
 
 from __future__ import annotations
 
 import jax
 
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.core import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips when ``multi_pod``."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests / small-scale runs."""
-    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=_auto(len(axes)))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Single-device mesh with the production axis names, for CPU smoke runs."""
     n = len(jax.devices())
     shape = (1, n) if n == 1 else (n, 1)
-    return jax.make_mesh(shape, ("data", "model"), axis_types=_auto(2))
+    return compat.make_mesh(shape, ("data", "model"))

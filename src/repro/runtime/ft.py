@@ -152,3 +152,90 @@ class FTController:
 
     def _log(self, msg: str):
         self.events.append((self.clock(), msg))
+
+
+# ---------------------------------------------------------------------------
+# Preemption-safe slot state for the serving engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SlotRecord:
+    """Durable record of one in-flight request (what replay needs)."""
+
+    request_id: str
+    prompt: tuple                  # token ids, immutable for safety
+    max_new_tokens: int
+    arrival_seq: int               # FIFO position — preserved across preemption
+    generated: list = dataclasses.field(default_factory=list)
+    prior: list = dataclasses.field(default_factory=list)  # pre-preemption run
+    completed: bool = False
+
+
+class RequestJournal:
+    """Write-ahead record of every admitted request.
+
+    The continuous-batching engine journals each request when it is admitted
+    to a slot and each token as it is emitted. If the engine is preempted
+    (worker loss, elastic rescale — the FTController events above), the
+    journal is the source of truth: ``incomplete()`` returns the in-flight
+    requests in their original FIFO order so the engine can re-queue and
+    replay them. Greedy decoding is deterministic, so a replay from the
+    prompt reproduces the original tokens bit-for-bit; ``record_token``
+    cross-checks this whenever a replayed slot overlaps its pre-preemption
+    progress.
+    """
+
+    def __init__(self):
+        self._records: dict[str, SlotRecord] = {}
+        self._seq = 0
+
+    def open(self, request_id: str, prompt, max_new_tokens: int) -> SlotRecord:
+        if request_id in self._records:
+            rec = self._records[request_id]
+            if rec.completed:
+                raise ValueError(f"request {request_id!r} already completed")
+            # replay restarts emission from scratch; keep the longest run
+            # observed so far so record_token can cross-check determinism
+            # even after a preemption that interrupts an earlier replay
+            if len(rec.generated) > len(rec.prior):
+                rec.prior = list(rec.generated)
+            rec.generated = []
+            return rec
+        rec = SlotRecord(request_id, tuple(int(t) for t in prompt),
+                         max_new_tokens, self._seq)
+        self._seq += 1
+        self._records[request_id] = rec
+        return rec
+
+    def record_token(self, request_id: str, token: int) -> None:
+        rec = self._records[request_id]
+        idx, token = len(rec.generated), int(token)
+        if idx < len(rec.prior) and rec.prior[idx] != token:
+            raise RuntimeError(
+                f"replay divergence for request {request_id!r} at token "
+                f"{idx}: original {rec.prior[idx]}, replay {token} — decode "
+                f"is expected to be deterministic")
+        rec.generated.append(token)
+
+    def complete(self, request_id: str) -> None:
+        self._records[request_id].completed = True
+
+    def get(self, request_id: str) -> SlotRecord:
+        return self._records[request_id]
+
+    def evict(self, request_id: str) -> None:
+        """Drop a completed record (post-acknowledgement cleanup). Evicting
+        an in-flight record would lose replay state, so that is an error."""
+        if not self._records[request_id].completed:
+            raise ValueError(f"request {request_id!r} is still in flight")
+        del self._records[request_id]
+
+    def incomplete(self) -> list[SlotRecord]:
+        """In-flight records, oldest first — the replay queue."""
+        return sorted((r for r in self._records.values() if not r.completed),
+                      key=lambda r: r.arrival_seq)
+
+    def completed(self) -> list[SlotRecord]:
+        return sorted((r for r in self._records.values() if r.completed),
+                      key=lambda r: r.arrival_seq)

@@ -1,21 +1,39 @@
-"""Serving: sharded prefill + decode steps and a batched generation engine.
+"""Serving: sharded prefill/decode steps and a continuous-batching engine.
 
 The decode step donates the cache (in-place HBM update — the IMC-style
-"computation mode" on resident state). Completion of a request batch is
-signaled through the XAIF interrupt analogue: a host callback the engine
-polls, mirroring the paper's accelerator end-of-computation interrupt."""
+"computation mode" on resident state). Completion of a request is signaled
+through the XAIF interrupt analogue (:class:`repro.core.xaif.
+InterruptController`), mirroring the paper's accelerator end-of-computation
+interrupt, and the finished slot's memory-bank power domains are clock-gated
+through the platform :class:`~repro.core.power.PowerManager`.
+
+Two layers live here:
+
+* :func:`build_sharded_serve` — jit + shardings for pod-scale prefill/decode
+  (used by the dry-run and the launch drivers, unchanged API).
+* :class:`ContinuousBatchingEngine` — a request-level serving loop: FIFO
+  admission queue with backpressure, slot-based batching where new requests
+  are prefilled into free decode slots *without stopping in-flight decodes*
+  (prefill is token-granular, so a prefilling slot and a decoding slot ride
+  the same batched step), a per-slot paged cache (one page per slot, donated
+  in-place), and preemption-safe replay through
+  :class:`repro.runtime.ft.RequestJournal`.
+"""
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.models import registry
 from repro.models.config import ModelConfig
+from repro.runtime.ft import RequestJournal
 from repro.sharding import axes as lx_
 from repro.sharding import params as P
 from repro.sharding import rules as R
@@ -102,35 +120,326 @@ def build_sharded_serve(cfg: ModelConfig, mesh: Mesh, rules: R.Rules,
 
 
 # ---------------------------------------------------------------------------
-# Simple engine loop (examples / CPU-scale serving)
+# Continuous-batching engine
 # ---------------------------------------------------------------------------
 
+COMPLETE_LINE = "serve.complete"     # interrupt line raised per finished request
+ADMIT_LINE = "serve.admit"           # raised per slot admission
 
-class Engine:
-    """Greedy batched generation with an interrupt-style completion callback."""
 
-    def __init__(self, cfg: ModelConfig, params, mesh: Mesh, rules: R.Rules,
-                 batch: int, max_len: int):
+# Jitted per-slot kernels are shared across engine instances: one step
+# function per model config (jax then caches compilations by slot count /
+# cache shapes), one reset function globally.
+_STEP_FNS: dict = {}
+_RESET_FN = None
+
+
+def _slot_step_fn(cfg: ModelConfig):
+    # ModelConfig is a frozen (hashable) dataclass; an unhashable config
+    # must fail loudly here rather than risk a wrong-model cache collision
+    if cfg not in _STEP_FNS:
+        def one(params, cache, tok):
+            logits, cache = registry.decode_step(params, cfg, cache, tok)
+            return jnp.argmax(logits, -1)[0].astype(jnp.int32), cache
+
+        vstep = jax.vmap(one, in_axes=(None, 0, 0))
+        _STEP_FNS[cfg] = jax.jit(vstep, donate_argnums=(1,))
+    return _STEP_FNS[cfg]
+
+
+def _slot_reset_fn():
+    global _RESET_FN
+    if _RESET_FN is None:
+        def reset(cache, slot, template):
+            # reset one page to the cache family's true initial values (the
+            # template), not to zeros — a future family may init non-zero
+            return jax.tree.map(
+                lambda leaf, init: leaf.at[slot].set(init), cache, template)
+
+        _RESET_FN = jax.jit(reset, donate_argnums=(0,))
+    return _RESET_FN
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request. ``tokens`` is filled in by the engine."""
+
+    id: str
+    prompt: Sequence[int]
+    max_new_tokens: int
+    on_complete: Callable[["Request"], None] | None = None
+    # engine-written bookkeeping
+    tokens: list = dataclasses.field(default_factory=list)
+    arrival_time: float | None = None
+    admit_time: float | None = None
+    finish_time: float | None = None
+
+    def __post_init__(self):
+        self.prompt = tuple(int(t) for t in self.prompt)
+        if not self.prompt:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side state of one decode slot (device state lives in the cache)."""
+
+    request: Request
+    seq: int                 # FIFO sequence number of the request
+    fed: int = 0             # prompt tokens already fed (token-granular prefill)
+    produced: int = 0        # generated tokens so far
+    next_token: int = 0      # token to feed at the next engine step
+
+    @property
+    def prefilling(self) -> bool:
+        return self.fed < len(self.request.prompt)
+
+
+class ContinuousBatchingEngine:
+    """Slot-based continuous batching over a per-slot paged cache.
+
+    Each of the ``slots`` decode lanes holds one request's cache page —
+    built as ``vmap`` over the batch-1 decode step, so every slot carries
+    its *own* position counter and its lane is bit-independent of the other
+    lanes' contents. One :meth:`step` advances every occupied lane by one
+    token: lanes still consuming their prompt are teacher-forced (token-
+    granular prefill), lanes past it decode greedily. New requests are
+    admitted into free lanes between steps; in-flight lanes never stop.
+
+    The engine is deliberately clock-agnostic: pass ``clock`` (any
+    ``() -> float``) and drive :meth:`step` from a scheduler or from the
+    deterministic simulation harness in :mod:`repro.serve.sim`.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int, max_len: int,
+                 platform=None, queue_capacity: int | None = None,
+                 clock: Callable[[], float] = lambda: 0.0,
+                 journal: RequestJournal | None = None,
+                 pad_token: int = 0):
+        from repro.core.platform import Platform, XHeepConfig
+
+        if slots < 1:
+            raise ValueError("engine needs at least one decode slot")
+        if max_len < 2:
+            raise ValueError("max_len must fit a prompt token plus one output")
         self.cfg = cfg
         self.params = params
-        self.sv = build_sharded_serve(cfg, mesh, rules, batch, max_len,
-                                      prefill_len=None)
-        self.batch = batch
+        self.n_slots = slots
         self.max_len = max_len
+        owns_platform = platform is None
+        self.platform = platform or Platform(XHeepConfig())
+        self.queue_capacity = queue_capacity
+        self.clock = clock
+        self.journal = journal or RequestJournal()
+        self.pad_token = pad_token
 
-    def generate(self, prompt_tokens, steps: int, on_complete=None):
-        cache = registry.cache_init(self.cfg, self.batch, self.max_len)
-        toks = prompt_tokens
-        out = []
-        # teacher-forced prompt consumption (simple engine: token-by-token)
-        for t in range(prompt_tokens.shape[1]):
-            logits, cache = self.sv.decode_fn(self.params, cache, toks[:, t:t + 1])
-        nxt = jnp.argmax(logits, -1)[:, None]
-        for _ in range(steps):
-            out.append(nxt)
-            logits, cache = self.sv.decode_fn(self.params, cache, nxt)
-            nxt = jnp.argmax(logits, -1)[:, None]
-        result = jnp.concatenate(out, axis=1)
-        if on_complete is not None:
-            on_complete(result)   # XAIF interrupt analogue
-        return result
+        self.queue: collections.deque[Request] = collections.deque()
+        self._ids: set[str] = set()            # every id ever submitted
+        self.slots: list[_Slot | None] = [None] * slots
+        self._dirty: set[int] = set()          # lanes holding a dead cache page
+        self._seq = 0
+
+        # throughput counters — monotone by construction
+        self.steps = 0
+        self.tokens_generated = 0
+        self.prompt_tokens_processed = 0
+        self.completed: list[Request] = []
+        self.rejected = 0
+
+        self._step_fn = _slot_step_fn(cfg)
+        self._reset_fn = _slot_reset_fn()
+        self._page_template = registry.cache_init(cfg, 1, max_len)
+        self._cache = self._init_cache()
+
+        n_banks = self.platform.config.n_banks
+        self._slot_bank = [f"bank{i % n_banks}" for i in range(slots)]
+        # our own platform: the whole idle bank pool starts gated. A shared
+        # platform's states are left untouched at construction — another
+        # engine may have live slot state in any bank; all wake/gate
+        # transitions go through the platform's shared bank refcounts.
+        if owns_platform:
+            for i in range(n_banks):
+                self.platform.power.clock_gate(f"bank{i}")
+
+    # -- device-state plumbing ----------------------------------------------
+
+    def _init_cache(self):
+        # one page per slot, each an exact copy of the family's batch-1
+        # initial cache (not assumed to be zeros)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.n_slots,) + x.shape),
+            self._page_template)
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, request: Request) -> bool:
+        """Enqueue a request; False (and counted) when backpressure rejects it."""
+        if len(request.prompt) + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {request.id!r} needs "
+                f"{len(request.prompt) + request.max_new_tokens} positions, "
+                f"engine max_len is {self.max_len}")
+        if request.id in self._ids:
+            # ids key the journal; a duplicate would silently interleave two
+            # requests' tokens into one record and break preemption replay
+            raise ValueError(f"duplicate request id {request.id!r}")
+        if (self.queue_capacity is not None
+                and len(self.queue) >= self.queue_capacity):
+            self.rejected += 1
+            return False
+        request.arrival_time = (request.arrival_time
+                                if request.arrival_time is not None
+                                else self.clock())
+        self._ids.add(request.id)
+        self.queue.append(request)
+        return True
+
+    def _admit(self) -> None:
+        for i in range(self.n_slots):
+            if not self.queue:
+                break
+            if self.slots[i] is not None:
+                continue
+            req = self.queue.popleft()              # FIFO — fairness invariant
+            if i in self._dirty:
+                self._cache = self._reset_fn(self._cache, i,
+                                             self._page_template)
+                self._dirty.discard(i)
+            rec = self.journal.open(req.id, req.prompt, req.max_new_tokens)
+            req.tokens = []
+            req.admit_time = self.clock()
+            self.slots[i] = _Slot(request=req, seq=rec.arrival_seq,
+                                  next_token=req.prompt[0])
+            # shared refcount wakes the bank if idle
+            self.platform.bank_acquire(self._slot_bank[i])
+            self.platform.interrupts.fire(ADMIT_LINE, req)
+
+    # -- the engine step ------------------------------------------------------
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def busy(self) -> bool:
+        return self.active > 0 or bool(self.queue)
+
+    def step(self) -> bool:
+        """Admit, then advance every occupied lane one token. False if idle."""
+        self._admit()
+        if self.active == 0:
+            return False
+        toks = np.full((self.n_slots, 1, 1), self.pad_token, np.int32)
+        for i, slot in enumerate(self.slots):
+            if slot is not None:
+                toks[i, 0, 0] = slot.next_token
+        # empty lanes still ride the batched step (pad token): their pages are
+        # garbage afterwards and must be reset before the next admission
+        self._dirty.update(i for i, s in enumerate(self.slots) if s is None)
+        nxt, self._cache = self._step_fn(self.params, self._cache,
+                                         jnp.asarray(toks))
+        nxt = np.asarray(jax.device_get(nxt))
+        self.steps += 1
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            slot.fed += 1
+            if slot.prefilling:
+                # still consuming the prompt: teacher-force the next token
+                slot.next_token = slot.request.prompt[slot.fed]
+                self.prompt_tokens_processed += 1
+            else:
+                if slot.fed == len(slot.request.prompt):
+                    self.prompt_tokens_processed += 1
+                tok = int(nxt[i])
+                slot.request.tokens.append(tok)
+                self.journal.record_token(slot.request.id, tok)
+                slot.produced += 1
+                self.tokens_generated += 1
+                slot.next_token = tok
+                if slot.produced >= slot.request.max_new_tokens:
+                    self._complete(i)
+        return True
+
+    def _complete(self, i: int) -> None:
+        slot = self.slots[i]
+        req = slot.request
+        req.finish_time = self.clock()
+        self.journal.complete(req.id)
+        self._evict(i)
+        self.completed.append(req)
+        # XAIF end-of-computation interrupt, then the per-request handler
+        self.platform.interrupts.fire(COMPLETE_LINE, req)
+        if req.on_complete is not None:
+            req.on_complete(req)
+
+    def _evict(self, i: int) -> None:
+        self.slots[i] = None
+        self._dirty.add(i)
+        # shared refcount: gates only when no engine holds the bank
+        self.platform.bank_release(self._slot_bank[i])
+
+    @property
+    def _bank_load(self) -> dict[str, int]:
+        """This engine's live slots per bank — derived, single source of
+        truth is slot occupancy (the platform refcounts span all engines)."""
+        load = {b: 0 for b in set(self._slot_bank)}
+        for i, s in enumerate(self.slots):
+            if s is not None:
+                load[self._slot_bank[i]] += 1
+        return load
+
+    # -- preemption -----------------------------------------------------------
+
+    def preempt(self) -> list[Request]:
+        """Evict every lane; re-queue in-flight requests in FIFO order.
+
+        Greedy decode is deterministic, so replay from the journal's prompts
+        reproduces the preempted requests' outputs bit-for-bit.
+        """
+        inflight = sorted(
+            ((i, s) for i, s in enumerate(self.slots) if s is not None),
+            key=lambda t: t[1].seq)
+        for i, _ in inflight:
+            self._evict(i)
+        requeued = [s.request for _, s in inflight]
+        for req in requeued:
+            req.tokens = []
+            req.admit_time = req.finish_time = None
+        self.queue.extendleft(reversed(requeued))
+        return requeued
+
+    # -- convenience ----------------------------------------------------------
+
+    def run_until_idle(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            if not self.step():
+                return
+        raise RuntimeError(f"engine still busy after {max_steps} steps")
+
+    def drain_completed(self) -> list[Request]:
+        """Hand off finished requests and release their retained state.
+
+        A long-running serving loop must call this periodically (after
+        delivering results) or per-request history — completed list, journal
+        records, id registry — grows without bound. Drained ids become
+        reusable.
+        """
+        done, self.completed = self.completed, []
+        for req in done:
+            self.journal.evict(req.id)
+            self._ids.discard(req.id)
+        return done
+
+    def stats(self) -> dict:
+        return {
+            "steps": self.steps,
+            "tokens_generated": self.tokens_generated,
+            "prompt_tokens_processed": self.prompt_tokens_processed,
+            "completed": len(self.completed),
+            "rejected": self.rejected,
+            "queued": len(self.queue),
+            "active": self.active,
+        }

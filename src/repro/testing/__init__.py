@@ -1,0 +1,1 @@
+"""Test-support utilities that ship with the library (no test-only deps)."""

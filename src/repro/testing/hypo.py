@@ -1,0 +1,109 @@
+"""A tiny, dependency-free stand-in for the ``hypothesis`` subset we use.
+
+The property tests in ``tests/`` are written against ``hypothesis`` when it
+is installed. The serving image does not ship it, so this module provides a
+seeded-random fallback implementing exactly the API surface those tests use:
+
+* ``@given(**kwargs)`` with keyword strategies
+* ``@settings(max_examples=..., deadline=...)`` stacked outside ``given``
+* ``strategies.integers/floats/booleans/lists/sampled_from``
+
+Semantics differ from real hypothesis in the expected ways: examples are
+drawn from a fixed-seed PRNG (deterministic across runs, no shrinking, no
+example database). Each strategy exposes ``example(rng)``; ``given`` draws
+``max_examples`` assignments and calls the test once per assignment.
+
+Usage in tests::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from repro.testing.hypo import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+
+import random
+
+_DEFAULT_MAX_EXAMPLES = 50
+_SEED = 0xA11CE
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> Strategy:
+        return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> Strategy:
+        return Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(options) -> Strategy:
+        options = list(options)
+        return Strategy(lambda rng: rng.choice(options))
+
+    @staticmethod
+    def lists(elements: Strategy, *, min_size: int = 0,
+              max_size: int = 10) -> Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example(rng) for _ in range(n)]
+
+        return Strategy(draw)
+
+
+strategies = _Strategies()
+st = strategies  # common alias
+
+
+def given(**strat_kwargs):
+    """Decorator: run the test once per drawn example (seeded, deterministic)."""
+
+    def deco(fn):
+        # NB: no functools.wraps — copying __wrapped__ would let pytest see
+        # the original signature and demand fixtures for the strategy params.
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hypo_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            for i in range(n):
+                drawn = {k: s.example(rng) for k, s in strat_kwargs.items()}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example (#{i + 1}/{n}): {drawn}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._hypo_given = True
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Decorator: bound the number of examples ``given`` draws."""
+
+    def deco(fn):
+        fn._hypo_max_examples = max_examples
+        return fn
+
+    return deco

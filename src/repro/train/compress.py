@@ -21,7 +21,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.core import compat
+from repro.core.compat import shard_map
 
 F32 = jnp.float32
 
@@ -41,7 +43,7 @@ def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
 def compressed_psum_tree(grads: Any, error: Any, axis: str) -> tuple[Any, Any]:
     """Inside a shard_map manual region: int8-quantized psum over ``axis``
     with error feedback. Returns (reduced fp32 grads, new error state)."""
-    n = lax.axis_size(axis)
+    n = compat.axis_size(axis)
 
     def one(g, e):
         g = g.astype(F32) + e.astype(F32)       # apply feedback

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.core.compat import shard_map
 
 
 def pipeline_forward(stage_fn: Callable, mesh: Mesh, axis: str = "stage"):

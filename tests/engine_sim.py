@@ -1,0 +1,76 @@
+"""Deterministic simulation harness for the serving-engine tests.
+
+Thin test-facing layer over :mod:`repro.serve.sim`: everything here is
+driven by a :class:`FakeClock` and scripted arrival traces, so every
+assertion in ``test_engine.py`` is exactly reproducible — no wall clock,
+no threads, no randomness outside fixed seeds.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro import configs
+from repro.core.platform import Platform, XHeepConfig
+from repro.models import registry
+from repro.serve.engine import ContinuousBatchingEngine, Request
+from repro.serve.sim import (Arrival, FakeClock, SimReport, Simulator,
+                             burst_trace, staggered_trace)
+from repro.sharding import params as P
+
+__all__ = [
+    "Arrival", "FakeClock", "SimReport", "Simulator", "burst_trace",
+    "staggered_trace", "Request", "make_engine", "make_requests",
+    "run_trace", "smoke_params",
+]
+
+_PARAM_CACHE: dict[str, tuple] = {}
+
+
+def smoke_params(arch: str = "granite_3_2b", seed: int = 0):
+    """(cfg, params) for a tiny CPU model; cached per arch across tests."""
+    key = f"{arch}:{seed}"
+    if key not in _PARAM_CACHE:
+        cfg = configs.smoke(arch)
+        params = P.init_tree(registry.decls(cfg), jax.random.key(seed))
+        _PARAM_CACHE[key] = (cfg, params)
+    return _PARAM_CACHE[key]
+
+
+def make_engine(arch: str = "granite_3_2b", *, slots: int = 3,
+                max_len: int = 32, clock: FakeClock | None = None,
+                platform: Platform | None = None, n_banks: int | None = None,
+                queue_capacity: int | None = None):
+    """A tiny engine on a fake clock. Returns (engine, clock)."""
+    cfg, params = smoke_params(arch)
+    clock = clock or FakeClock()
+    if platform is None and n_banks is not None:
+        platform = Platform(XHeepConfig(n_banks=n_banks))
+        for i in range(n_banks):        # the platform owner gates idle banks
+            platform.power.clock_gate(f"bank{i}")
+    eng = ContinuousBatchingEngine(cfg, params, slots=slots, max_len=max_len,
+                                   clock=clock, platform=platform,
+                                   queue_capacity=queue_capacity)
+    return eng, clock
+
+
+def make_requests(n: int, *, prompt_len: int = 3, new_tokens: int = 4,
+                  prefix: str = "r") -> list[Request]:
+    """n deterministic requests with distinct prompts."""
+    return [
+        Request(id=f"{prefix}{i}",
+                prompt=[(7 * i + j) % 251 + 1 for j in range(prompt_len)],
+                max_new_tokens=new_tokens)
+        for i in range(n)
+    ]
+
+
+def run_trace(arch: str, trace, *, slots: int = 3, max_len: int = 32,
+              sequential: bool = False, step_time: float = 1.0,
+              queue_capacity: int | None = None):
+    """Build a fresh engine, run the trace to completion. (engine, report)."""
+    eng, clock = make_engine(arch, slots=slots, max_len=max_len,
+                             queue_capacity=queue_capacity)
+    sim = Simulator(eng, trace, clock, step_time=step_time,
+                    sequential=sequential)
+    return eng, sim.run()

@@ -70,6 +70,7 @@ def test_metadata_roundtrip(tmp_path):
     assert meta["arch"] == "granite"
 
 
+@pytest.mark.slow   # subprocess with 8 host devices
 def test_elastic_resharding_across_meshes(subproc, tmp_path):
     """Save sharded on a (2,4) mesh, restore onto (4,2) and (1,1)."""
     code = f"""

@@ -3,12 +3,14 @@ pipeline parallelism, production-mesh smoke (tiny arch on 512 devices)."""
 
 import pytest
 
+pytestmark = pytest.mark.slow   # every test here forks a multi-device process
+
 
 def test_compressed_pod_psum_close_to_exact(subproc):
     code = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.core.compat import shard_map
 from repro.launch.mesh import make_mesh
 from repro.train.compress import compressed_psum_tree, init_error_state
 

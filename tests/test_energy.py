@@ -1,7 +1,11 @@
 """Calibrated energy model vs every measured number in the paper."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the in-repo seeded-random subset
+    from repro.testing.hypo import given, settings, strategies as st
 
 from repro.core import energy as E
 from repro.core.power import PowerDomain, PowerManager, PowerState

@@ -1,0 +1,296 @@
+"""Continuous-batching engine under the deterministic simulation harness.
+
+Every test drives the scheduler step-by-step on CPU with tiny models and a
+fake clock (see ``engine_sim.py``): invariants (no slot leaks, FIFO
+fairness, monotone counters), bit-identical outputs vs single-request
+serving, interrupt/power-gating behaviour, preemption replay, and the
+headline property — continuous batching beats one-request-at-a-time
+throughput on a staggered arrival trace.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from engine_sim import (FakeClock, Request, Simulator, burst_trace,
+                        make_engine, make_requests, run_trace, smoke_params,
+                        staggered_trace)
+from repro.core.power import PowerState
+from repro.models import registry
+from repro.serve.engine import ADMIT_LINE, COMPLETE_LINE
+
+
+def _tokens(report):
+    return {r.id: tuple(r.tokens) for r in report.completed}
+
+
+# -- the headline acceptance property -----------------------------------------
+
+
+def test_continuous_batching_beats_sequential_and_is_bit_identical():
+    """Staggered arrivals: higher tokens/s on the fake clock than serving
+    one request at a time, with per-request outputs bit-identical."""
+    trace_a = staggered_trace(make_requests(6), gap=2.0)
+    trace_b = staggered_trace(make_requests(6), gap=2.0)
+    _, cont = run_trace("granite_3_2b", trace_a, slots=3)
+    _, seq = run_trace("granite_3_2b", trace_b, slots=3, sequential=True)
+    assert cont.tokens_generated == seq.tokens_generated == 6 * 4
+    assert cont.throughput > seq.throughput
+    assert cont.elapsed < seq.elapsed
+    assert _tokens(cont) == _tokens(seq)
+
+
+@pytest.mark.parametrize(
+    "arch", ["granite_3_2b",
+             pytest.param("mamba2_370m", marks=pytest.mark.slow),
+             pytest.param("recurrentgemma_2b", marks=pytest.mark.slow)])
+def test_outputs_bit_identical_across_cache_families(arch):
+    """The per-slot page is bit-independent of the other lanes for every
+    cache family (KV ring, SSM state, Griffin hybrid)."""
+    _, cont = run_trace(arch, staggered_trace(make_requests(5), gap=1.0),
+                        slots=2)
+    _, seq = run_trace(arch, staggered_trace(make_requests(5), gap=1.0),
+                       slots=2, sequential=True)
+    assert _tokens(cont) == _tokens(seq)
+
+
+def test_engine_matches_raw_batch1_decode():
+    """Engine greedy output == a hand-rolled batch-1 decode_step loop."""
+    cfg, params = smoke_params("granite_3_2b")
+    prompt, new = [5, 9, 13], 4
+    step = jax.jit(lambda p, c, t: registry.decode_step(p, cfg, c, t))
+    cache = registry.cache_init(cfg, 1, 32)
+    tok = jnp.asarray([[prompt[0]]], jnp.int32)
+    raw, fed = [], 0
+    while len(raw) < new:
+        logits, cache = step(params, cache, tok)
+        fed += 1
+        if fed < len(prompt):
+            tok = jnp.asarray([[prompt[fed]]], jnp.int32)
+        else:
+            t = int(jnp.argmax(logits, -1)[0])
+            raw.append(t)
+            tok = jnp.asarray([[t]], jnp.int32)
+
+    eng, _ = make_engine("granite_3_2b", slots=3)
+    eng.submit(Request(id="x", prompt=prompt, max_new_tokens=new))
+    eng.run_until_idle()
+    assert eng.completed[0].tokens == raw
+
+
+# -- scheduler invariants ------------------------------------------------------
+
+
+def test_no_slot_leaks_and_engine_reusable():
+    eng, clock = make_engine(slots=2)
+    sim = Simulator(eng, burst_trace(make_requests(5)), clock)
+    sim.run()
+    assert eng.active == 0 and not eng.queue
+    assert all(s is None for s in eng.slots)
+    assert all(load == 0 for load in eng._bank_load.values())
+    # the drained engine admits fresh work (slot pages reset correctly)
+    more = Simulator(eng, burst_trace(make_requests(3, prefix="s")), clock)
+    more.run()
+    assert len(eng.completed) == 8
+
+
+def test_fifo_fairness_under_saturation():
+    """More requests than slots: admission and completion follow arrival
+    order (equal-length requests cannot overtake each other)."""
+    eng, clock = make_engine(slots=2)
+    admitted = []
+    eng.platform.interrupts.connect(ADMIT_LINE, lambda r: admitted.append(r.id))
+    report = Simulator(eng, burst_trace(make_requests(7)), clock).run()
+    want = [f"r{i}" for i in range(7)]
+    assert admitted == want
+    assert [r.id for r in report.completed] == want
+    admit_times = [r.admit_time for r in report.completed]
+    assert admit_times == sorted(admit_times)
+
+
+def test_throughput_counters_monotone():
+    eng, _ = make_engine(slots=2)
+    for r in make_requests(4):
+        eng.submit(r)
+    seen = []
+    while eng.busy:
+        eng.step()
+        seen.append((eng.steps, eng.tokens_generated,
+                     eng.prompt_tokens_processed, len(eng.completed)))
+    for a, b in zip(seen, seen[1:]):
+        assert all(x <= y for x, y in zip(a, b))
+    assert eng.tokens_generated == sum(len(r.tokens) for r in eng.completed)
+    assert eng.prompt_tokens_processed == 4 * 3
+
+
+def test_in_flight_decodes_never_stop_for_admissions():
+    """A long request admitted first keeps producing a token every single
+    engine step while later arrivals prefill into other lanes."""
+    eng, clock = make_engine(slots=3)
+    long = Request(id="long", prompt=[3, 1], max_new_tokens=12)
+    eng.submit(long)
+    produced = []
+    late = make_requests(4, prefix="late")
+    for step in range(14):
+        if step in (3, 5, 7, 9):
+            eng.submit(late[(step - 3) // 2])
+        eng.step()
+        produced.append(len(long.tokens))
+    # after the 2-token prompt, every step emits exactly one token for `long`
+    deltas = [b - a for a, b in zip(produced, produced[1:])]
+    assert deltas[1:11] == [1] * 10
+
+
+# -- admission control ---------------------------------------------------------
+
+
+def test_queue_backpressure_rejects_when_full():
+    eng, _ = make_engine(slots=2, queue_capacity=2)
+    results = [eng.submit(r) for r in make_requests(5)]
+    assert results == [True, True, False, False, False]
+    assert eng.rejected == 3
+    eng.run_until_idle()
+    assert len(eng.completed) == 2
+
+
+def test_oversized_request_raises():
+    eng, _ = make_engine(slots=1, max_len=8)
+    with pytest.raises(ValueError):
+        eng.submit(Request(id="big", prompt=[1] * 6, max_new_tokens=6))
+
+
+def test_duplicate_request_id_rejected():
+    eng, _ = make_engine(slots=2)
+    eng.submit(Request(id="dup", prompt=[1, 2, 3], max_new_tokens=2))
+    with pytest.raises(ValueError, match="duplicate request id"):
+        eng.submit(Request(id="dup", prompt=[9, 8, 7], max_new_tokens=2))
+    eng.run_until_idle()
+    with pytest.raises(ValueError, match="duplicate request id"):
+        eng.submit(Request(id="dup", prompt=[4], max_new_tokens=1))
+
+
+# -- XAIF interrupts + power gating -------------------------------------------
+
+
+def test_completion_interrupts_and_callbacks():
+    eng, clock = make_engine(slots=2)
+    done = []
+    eng.platform.interrupts.connect(COMPLETE_LINE, lambda r: done.append(r.id))
+    reqs = make_requests(4)
+    reqs[0].on_complete = lambda r: done.append(f"cb:{r.id}")
+    Simulator(eng, burst_trace(reqs), clock).run()
+    assert eng.platform.interrupts.count(COMPLETE_LINE) == 4
+    assert eng.platform.interrupts.count(ADMIT_LINE) == 4
+    assert "cb:r0" in done and done.count("r0") == 1
+
+
+def test_bank_power_gating_follows_slot_occupancy():
+    # 3 slots over 2 banks: slots 0,2 share bank0; slot 1 owns bank1
+    eng, _ = make_engine(slots=3, n_banks=2)
+    pm = eng.platform.power
+    assert pm.state("bank0") is PowerState.CLOCK_GATED
+    assert pm.state("bank1") is PowerState.CLOCK_GATED
+
+    short = Request(id="short", prompt=[1, 2], max_new_tokens=1)
+    long0 = Request(id="long0", prompt=[3, 4], max_new_tokens=6)
+    long1 = Request(id="long1", prompt=[5, 6], max_new_tokens=6)
+    for r in (long0, short, long1):   # slots 0, 1, 2 in submission order
+        eng.submit(r)
+    eng.step()
+    assert pm.state("bank0") is PowerState.ON
+    assert pm.state("bank1") is PowerState.ON
+    while not short.tokens:
+        eng.step()
+    # `short` (slot 1, bank1) is done -> bank1 gated; bank0 still hosts both
+    # long requests (slots 0 and 2) and must stay on
+    assert pm.state("bank1") is PowerState.CLOCK_GATED
+    assert pm.state("bank0") is PowerState.ON
+    eng.run_until_idle()
+    assert pm.state("bank0") is PowerState.CLOCK_GATED
+    assert pm.state("bank1") is PowerState.CLOCK_GATED
+
+
+# -- preemption-safe slot state ------------------------------------------------
+
+
+def test_preemption_replay_is_bit_identical():
+    baseline, rep = run_trace("granite_3_2b",
+                              burst_trace(make_requests(5)), slots=2)
+    eng, _ = make_engine(slots=2)
+    for r in make_requests(5):
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()                      # mid-flight: slots hold partial state
+    requeued = eng.preempt()
+    assert requeued and eng.active == 0
+    assert all(load == 0 for load in eng._bank_load.values())
+    eng.run_until_idle()
+    assert _tokens(rep) == {r.id: tuple(r.tokens) for r in eng.completed}
+
+
+def test_journal_tracks_in_flight_requests():
+    eng, _ = make_engine(slots=2)
+    for r in make_requests(4):
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    inflight = {rec.request_id for rec in eng.journal.incomplete()}
+    assert inflight == {"r0", "r1"}     # admitted but unfinished
+    eng.run_until_idle()
+    assert not eng.journal.incomplete()
+    assert [rec.request_id for rec in eng.journal.completed()] == \
+        [f"r{i}" for i in range(4)]
+    rec = eng.journal.get("r2")
+    assert list(rec.generated) == eng.completed[2].tokens
+
+
+def test_drain_completed_releases_history_and_ids():
+    eng, _ = make_engine(slots=2)
+    eng.submit(Request(id="a", prompt=[1, 2], max_new_tokens=2))
+    eng.run_until_idle()
+    done = eng.drain_completed()
+    assert [r.id for r in done] == ["a"]
+    assert eng.completed == []
+    with pytest.raises(KeyError):
+        eng.journal.get("a")
+    # the drained id is reusable (fresh request, fresh record)
+    assert eng.submit(Request(id="a", prompt=[3, 4], max_new_tokens=2))
+    eng.run_until_idle()
+    assert len(eng.completed) == 1
+
+
+def test_shared_platform_power_state_not_clobbered():
+    """Two engines on one platform: neither construction nor one engine's
+    eviction may gate a bank where the other still has live slot state."""
+    from repro.core.platform import Platform, XHeepConfig
+
+    platform = Platform(XHeepConfig(n_banks=8))
+    eng1, _ = make_engine(slots=2, platform=platform)
+    eng1.submit(Request(id="live", prompt=[1, 2], max_new_tokens=8))
+    eng1.step()
+    assert platform.power.state("bank0") is PowerState.ON
+    # second engine, same platform: construction must not gate bank0
+    eng2, _ = make_engine(slots=1, platform=platform)
+    assert platform.power.state("bank0") is PowerState.ON
+    # eng2 runs a short request through ITS bank0 slot and finishes; the
+    # shared refcount keeps bank0 on because eng1 is still decoding there
+    eng2.submit(Request(id="short", prompt=[5], max_new_tokens=1))
+    eng2.run_until_idle()
+    assert platform.power.state("bank0") is PowerState.ON
+    eng1.run_until_idle()   # last holder leaves -> gated
+    assert platform.power.state("bank0") is PowerState.CLOCK_GATED
+
+
+def test_journal_detects_replay_divergence():
+    """The determinism canary: a replay emitting a different token than the
+    pre-preemption run must fail loudly, not silently diverge."""
+    from repro.runtime.ft import RequestJournal
+
+    j = RequestJournal()
+    j.open("r", [1, 2], max_new_tokens=3)
+    j.record_token("r", 10)
+    j.record_token("r", 11)
+    j.open("r", [1, 2], max_new_tokens=3)      # preempted -> replay
+    j.record_token("r", 10)                    # matches original: fine
+    with pytest.raises(RuntimeError, match="replay divergence"):
+        j.record_token("r", 99)                # diverges from original 11

@@ -1,7 +1,11 @@
 """Fault-tolerance controller: heartbeats, stragglers, rescale, backoff."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # fall back to the in-repo seeded-random subset
+    from repro.testing.hypo import given, settings, strategies as st
 
 from repro.runtime.ft import FTConfig, FTController, WorkerState
 

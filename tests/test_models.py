@@ -21,7 +21,15 @@ def _inputs(cfg, b, s, seed=1):
     return {"embeds": jax.random.normal(key, (b, s, cfg.d_model), jnp.bfloat16)}
 
 
-@pytest.mark.parametrize("arch", configs.names())
+# fast tier keeps one arch per family (+MoE); the long tail of exotic
+# configs runs in the full tier
+_FAST_FORWARD = {"granite_3_2b", "mamba2_370m", "recurrentgemma_2b",
+                 "grok_1_314b"}
+
+
+@pytest.mark.parametrize(
+    "arch", [a if a in _FAST_FORWARD else pytest.param(a, marks=pytest.mark.slow)
+             for a in configs.names()])
 def test_smoke_forward_shapes_finite(arch):
     cfg = configs.smoke(arch)
     params = _init(cfg)
@@ -32,6 +40,7 @@ def test_smoke_forward_shapes_finite(arch):
     assert bool(jnp.isfinite(aux))
 
 
+@pytest.mark.slow   # builds a sharded train step per architecture
 @pytest.mark.parametrize("arch", configs.names())
 def test_smoke_train_step_no_nans(arch):
     from repro.launch.mesh import make_host_mesh
@@ -68,6 +77,7 @@ def test_smoke_train_step_no_nans(arch):
 
 # decode-vs-forward consistency: greedy decode logits must match the
 # training forward at the same positions (teacher forcing).
+@pytest.mark.slow   # token-by-token decode sweep across five architectures
 @pytest.mark.parametrize("arch", ["granite_3_2b", "mamba2_370m",
                                   "recurrentgemma_2b", "h2o_danube3_4b",
                                   "grok_1_314b"])
@@ -94,6 +104,7 @@ def test_decode_matches_forward(arch):
     assert max(errs) < 0.15, errs  # bf16 accumulation tolerance
 
 
+@pytest.mark.slow   # prefill + decode consistency sweep
 @pytest.mark.parametrize("arch", ["granite_3_2b", "mamba2_370m",
                                   "recurrentgemma_2b"])
 def test_prefill_then_decode_matches_forward(arch):

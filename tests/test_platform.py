@@ -78,6 +78,124 @@ def test_cgra_port_structure_matches_paper():
     assert cgra.power_domain.name == "cgra"
 
 
+def test_registry_duplicate_registration_rejected_per_op_impl():
+    reg = XaifRegistry()
+    reg.register(AcceleratorSpec(name="a", op="op1", impl="ref", fn=lambda: 1))
+    # same op, different impl: fine
+    reg.register(AcceleratorSpec(name="b", op="op1", impl="pallas", fn=lambda: 2))
+    # different op, same impl name: fine
+    reg.register(AcceleratorSpec(name="c", op="op2", impl="ref", fn=lambda: 3))
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register(AcceleratorSpec(name="d", op="op1", impl="ref",
+                                     fn=lambda: 4))
+    assert reg.impls("op1") == ["pallas", "ref"]
+    assert reg.ops() == ["op1", "op2"]
+
+
+def test_impl_for_falls_back_to_ref_when_core_backend_missing():
+    """cv32e40p wants pallas; an op with only ref/chunked must fall back."""
+    reg = XaifRegistry()
+    reg.register(AcceleratorSpec(name="r", op="rglru", impl="ref",
+                                 fn=lambda x: x))
+    reg.register(AcceleratorSpec(name="c", op="rglru", impl="chunked",
+                                 fn=lambda x: x * 2))
+    p = Platform(XHeepConfig(core="cv32e40p"), registry=reg)   # pallas core
+    assert p.impl_for("rglru") == "ref"
+    # chunked core finds its native impl
+    p2 = Platform(XHeepConfig(core="cv32e40x"), registry=reg)
+    assert p2.impl_for("rglru") == "chunked"
+    assert p2.dispatch("rglru", 21) == 42
+    # config override beats both
+    p3 = Platform(XHeepConfig(core="cv32e40x", op_impls={"rglru": "ref"}),
+                  registry=reg)
+    assert p3.impl_for("rglru") == "ref"
+
+
+def test_attach_joins_power_manager_exactly_once():
+    platform = Platform(XHeepConfig(), registry=XaifRegistry())
+    dom = PowerDomain("accel", leak_uw=5.0)
+    spec = AcceleratorSpec(name="v1", op="myop", impl="pallas",
+                           fn=lambda x: x, power_domain=dom)
+    platform.attach(spec)
+    leak_once = platform.power.leakage_uw()
+    # re-attach (upgraded fn, same op/impl/domain): no duplicate domain, no
+    # duplicate accelerator entry, no double leakage
+    spec2 = AcceleratorSpec(name="v2", op="myop", impl="pallas",
+                            fn=lambda x: x + 1, power_domain=dom)
+    platform.attach(spec2)
+    assert platform.power.leakage_uw() == leak_once
+    assert [s.name for s in platform.accelerators] == ["v2"]
+    assert platform.registry.get("myop", "pallas").fn(1) == 2
+
+
+def test_reattach_with_new_domain_drops_the_orphan():
+    platform = Platform(XHeepConfig(), registry=XaifRegistry())
+    platform.attach(AcceleratorSpec(name="v1", op="myop", impl="pallas",
+                                    fn=lambda x: x,
+                                    power_domain=PowerDomain("a", leak_uw=5.0)))
+    base = platform.power.leakage_uw() - 5.0
+    platform.attach(AcceleratorSpec(name="v2", op="myop", impl="pallas",
+                                    fn=lambda x: x,
+                                    power_domain=PowerDomain("b", leak_uw=7.0)))
+    # old domain "a" detached: leakage reflects only the live accelerator
+    assert "a" not in platform.power.domains
+    assert platform.power.leakage_uw() == pytest.approx(base + 7.0)
+
+
+def test_reattach_never_removes_platform_builtin_domains():
+    """A spec whose power_domain collides with a built-in ('bank0') must not
+    delete that built-in when the spec is replaced."""
+    platform = Platform(XHeepConfig(), registry=XaifRegistry())
+    bank0 = platform.power.domains["bank0"]
+    platform.attach(AcceleratorSpec(name="v1", op="myop", impl="pallas",
+                                    fn=lambda x: x, power_domain=bank0))
+    platform.attach(AcceleratorSpec(name="v2", op="myop", impl="pallas",
+                                    fn=lambda x: x,
+                                    power_domain=PowerDomain("fresh",
+                                                             leak_uw=1.0)))
+    assert "bank0" in platform.power.domains     # built-in survives
+    platform.power.clock_gate("bank0")           # and is still controllable
+
+
+def test_bank_refcounts_shared_across_holders():
+    platform = Platform(XHeepConfig(), registry=XaifRegistry())
+    platform.power.clock_gate("bank0")
+    platform.bank_acquire("bank0")
+    platform.bank_acquire("bank0")
+    assert platform.power.state("bank0") is PowerState.ON
+    platform.bank_release("bank0")
+    assert platform.power.state("bank0") is PowerState.ON    # one holder left
+    platform.bank_release("bank0")
+    assert platform.power.state("bank0") is PowerState.CLOCK_GATED
+    with pytest.raises(ValueError, match="released more than acquired"):
+        platform.bank_release("bank0")
+
+
+def test_interrupt_controller_counts_and_handlers():
+    from repro.core.xaif import InterruptController
+
+    irq = InterruptController()
+    got = []
+    irq.connect("acc.done", got.append)
+    assert irq.fire("acc.done", 7) == 1
+    assert got == [7]
+    # unconnected line: counted, not an error (pending/masked semantics)
+    assert irq.fire("other", None) == 0
+    assert irq.count("other") == 1 and irq.count("acc.done") == 1
+    irq.disconnect("acc.done", got.append)
+    irq.fire("acc.done")
+    assert got == [7] and irq.count("acc.done") == 2
+    assert irq.lines() == ["acc.done", "other"]
+
+
+def test_platform_has_interrupt_fabric():
+    platform = Platform(XHeepConfig(), registry=XaifRegistry())
+    seen = []
+    platform.interrupts.connect("serve.complete", seen.append)
+    platform.interrupts.fire("serve.complete", "req")
+    assert seen == ["req"]
+
+
 def test_bus_presets():
     from repro.launch.mesh import make_host_mesh
 

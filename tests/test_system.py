@@ -12,6 +12,7 @@ from repro.data.biosignal import (HEARTBEAT_ECG, SEIZURE_EEG, AcquisitionSim,
 from repro.data.lm import LMDataConfig, LMPipeline
 
 
+@pytest.mark.slow   # 300 optimizer steps
 def test_training_loss_decreases():
     from repro.launch import train as train_mod
 
@@ -24,6 +25,7 @@ def test_training_loss_decreases():
     assert loss < 5.35, loss
 
 
+@pytest.mark.slow   # two full training runs + checkpoint restore
 def test_restart_is_bit_identical(tmp_path):
     from repro.launch import train as train_mod
 
