@@ -1,19 +1,37 @@
 # Developer entry points. All targets run on CPU with the in-repo sources.
 #
 #   make test-fast    fast tier (tier-1 gate candidates, < 1 min): -m "not slow"
+#                     (runs docs-check first)
 #   make test-all     full suite including subprocess multi-device + sweeps
 #   make bench-serve  arrivals-trace serving benchmark (continuous vs sequential)
+#   make docs-check   intra-repo links in README/docs + serve/* docstrings
+#
+# bench-serve forwards extra flags given after `--` (and anything in
+# BENCH_ARGS, for flags that take values):
+#
+#   make bench-serve -- --shared-prefix
+#   make bench-serve -- --shared-prefix BENCH_ARGS="--prefill-chunk 4"
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test-fast test-all bench-serve
+BENCH_PASSTHRU = $(filter-out bench-serve,$(MAKECMDGOALS))
 
-test-fast:
+.PHONY: test-fast test-all bench-serve docs-check
+
+test-fast: docs-check
 	$(PY) -m pytest -q -m "not slow"
 
 test-all:
 	$(PY) -m pytest -x -q
 
 bench-serve:
-	$(PY) benchmarks/serve_bench.py --requests 16 --slots 4 --gap 2.0 --new-tokens 8
+	$(PY) benchmarks/serve_bench.py --requests 16 --slots 4 --gap 2.0 \
+		--new-tokens 8 $(BENCH_PASSTHRU) $(BENCH_ARGS)
+
+docs-check:
+	$(PY) tools/docs_check.py
+
+# swallow pass-through flags handed over as extra goals (see bench-serve)
+--%:
+	@:

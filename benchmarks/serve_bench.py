@@ -1,12 +1,20 @@
-"""Arrivals-trace serving benchmark: continuous batching vs sequential.
+"""Arrivals-trace serving benchmark: continuous batching, prefix sharing.
 
 Replays a deterministic trace of staggered request arrivals through the
-continuous-batching engine twice — once with the engine's native slot
-scheduler, once serving one request at a time — and reports tokens/s on
-the simulation clock plus (optionally) wall-clock step latency.
+continuous-batching engine and reports tokens/s on the simulation clock
+plus wall-clock step latency. Two modes:
+
+* default — continuous batching vs one-request-at-a-time serving (the
+  PR 1 headline comparison).
+* ``--shared-prefix [N]`` — every request's prompt shares an N-token
+  prefix (default 64); the engine with the paged prefix cache enabled is
+  compared against the same engine with no sharing. Combine with
+  ``--prefill-chunk`` / ``--page-size`` to explore the schedule.
 
   PYTHONPATH=src python benchmarks/serve_bench.py --arch granite-3-2b \
       --requests 16 --slots 4 --gap 2.0 --new-tokens 8
+  PYTHONPATH=src python benchmarks/serve_bench.py --shared-prefix \
+      --requests 8 --prefill-chunk 4
 """
 
 from __future__ import annotations
@@ -16,13 +24,15 @@ import json
 import math
 import pathlib
 import time
+from typing import Any
 
 import jax
 
 from repro import configs
 from repro.models import registry
 from repro.serve.engine import ContinuousBatchingEngine, Request
-from repro.serve.sim import FakeClock, Simulator, staggered_trace
+from repro.serve.sim import (FakeClock, Simulator, shared_prefix_requests,
+                             staggered_trace)
 from repro.sharding import params as P
 
 RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results" / "serve"
@@ -37,20 +47,25 @@ def build_requests(n: int, prompt_len: int, new_tokens: int) -> list[Request]:
     ]
 
 
-def run_once(cfg, params, args, *, sequential: bool) -> dict:
+def run_once(cfg, params, args, *, mode: str, sequential: bool = False,
+             requests=None, max_len=None, **engine_kwargs) -> tuple[dict, Any]:
     clock = FakeClock()
     eng = ContinuousBatchingEngine(cfg, params, slots=args.slots,
-                                   max_len=args.max_len, clock=clock)
-    trace = staggered_trace(
-        build_requests(args.requests, args.prompt_len, args.new_tokens),
-        gap=args.gap)
+                                   max_len=max_len or args.max_len,
+                                   clock=clock,
+                                   prefill_chunk=args.prefill_chunk,
+                                   **engine_kwargs)
+    if requests is None:
+        requests = build_requests(args.requests, args.prompt_len,
+                                  args.new_tokens)
+    trace = staggered_trace(requests, gap=args.gap)
     sim = Simulator(eng, trace, clock, sequential=sequential)
     w0 = time.perf_counter()
     report = sim.run()
     wall = time.perf_counter() - w0
     lat = [r.finish_time - r.arrival_time for r in report.completed]
     return {
-        "mode": "sequential" if sequential else "continuous",
+        "mode": mode,
         "elapsed_sim": report.elapsed,
         "engine_steps": report.steps,
         "tokens": report.tokens_generated,
@@ -62,7 +77,62 @@ def run_once(cfg, params, args, *, sequential: bool) -> dict:
             sorted(lat)[max(0, math.ceil(0.99 * len(lat)) - 1)], 3),
         "wall_s": round(wall, 3),
         "wall_tok_per_s": round(report.tokens_generated / wall, 1),
-    }
+    }, eng
+
+
+def _print_mode(mode: dict) -> None:
+    print(f"{mode['mode']:>11}: {mode['tokens']} tokens in "
+          f"{mode['elapsed_sim']:.1f} sim-s "
+          f"({mode['throughput_tok_per_sim_s']:.3f} tok/sim-s), "
+          f"mean latency {mode['mean_latency_sim']:.2f} sim-s, "
+          f"wall {mode['wall_s']:.2f}s")
+
+
+def run_default(cfg, params, args) -> tuple[dict, float]:
+    cont, _ = run_once(cfg, params, args, mode="continuous")
+    seq, _ = run_once(cfg, params, args, mode="sequential", sequential=True)
+    speedup = cont["throughput_tok_per_sim_s"] / seq["throughput_tok_per_sim_s"]
+    out = {"arch": cfg.name, "requests": args.requests, "slots": args.slots,
+           "gap": args.gap, "continuous": cont, "sequential": seq,
+           "sim_speedup": round(speedup, 3)}
+    if not args.json:
+        for mode in (cont, seq):
+            _print_mode(mode)
+        print(f"continuous batching speedup: {speedup:.2f}x")
+    return out, speedup
+
+
+def run_shared_prefix(cfg, params, args) -> tuple[dict, float]:
+    """Same shared-prefix trace through the engine with and without the
+    paged prefix cache; the speedup isolates what page reuse buys."""
+    prefix_len = args.shared_prefix
+    make = lambda: shared_prefix_requests(
+        args.requests, prefix_len=prefix_len, tail_len=args.tail_len,
+        new_tokens=args.new_tokens)
+    need = prefix_len + args.tail_len + args.new_tokens + 1
+    max_len = max(args.max_len, need)
+    shared, eng = run_once(cfg, params, args, mode="sharing",
+                           requests=make(), max_len=max_len,
+                           page_size=args.page_size)
+    plain, _ = run_once(cfg, params, args, mode="no-sharing",
+                        requests=make(), max_len=max_len)
+    speedup = (shared["throughput_tok_per_sim_s"]
+               / plain["throughput_tok_per_sim_s"])
+    pages = eng.stats()["pages"]
+    out = {"arch": cfg.name, "requests": args.requests, "slots": args.slots,
+           "gap": args.gap, "shared_prefix": prefix_len,
+           "page_size": args.page_size, "prefill_chunk": args.prefill_chunk,
+           "sharing": shared, "no_sharing": plain, "pages": pages,
+           "sharing_speedup": round(speedup, 3)}
+    if not args.json:
+        for mode in (shared, plain):
+            _print_mode(mode)
+        print(f"pages: {pages['hits']} hits / {pages['misses']} misses, "
+              f"{pages['tokens_reused']} prompt tokens reused, "
+              f"{pages['cow_copies']} CoW copies, "
+              f"{pages['resident']} resident")
+        print(f"prefix sharing speedup: {speedup:.2f}x")
+    return out, speedup
 
 
 def main(argv=None):
@@ -77,30 +147,32 @@ def main(argv=None):
     ap.add_argument("--gap", type=float, default=2.0)
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefill-chunk", type=int, default=1,
+                    help="prompt tokens fed per slot per step")
+    ap.add_argument("--shared-prefix", type=int, nargs="?", const=64,
+                    default=0, metavar="LEN",
+                    help="shared-prefix workload: compare the paged prefix "
+                         "cache against the no-sharing engine")
+    ap.add_argument("--tail-len", type=int, default=4,
+                    help="distinct prompt tokens after the shared prefix")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per shared-prefix page")
     ap.add_argument("--json", action="store_true")
     args = ap.parse_args(argv)
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     params = P.init_tree(registry.decls(cfg), jax.random.key(args.seed))
 
-    cont = run_once(cfg, params, args, sequential=False)
-    seq = run_once(cfg, params, args, sequential=True)
-    speedup = cont["throughput_tok_per_sim_s"] / seq["throughput_tok_per_sim_s"]
-    out = {"arch": cfg.name, "requests": args.requests, "slots": args.slots,
-           "gap": args.gap, "continuous": cont, "sequential": seq,
-           "sim_speedup": round(speedup, 3)}
+    if args.shared_prefix:
+        out, speedup = run_shared_prefix(cfg, params, args)
+        tag = "__shared_prefix"
+    else:
+        out, speedup = run_default(cfg, params, args)
+        tag = "__trace"
     if args.json:
         print(json.dumps(out, indent=1))
-    else:
-        for mode in (cont, seq):
-            print(f"{mode['mode']:>11}: {mode['tokens']} tokens in "
-                  f"{mode['elapsed_sim']:.1f} sim-s "
-                  f"({mode['throughput_tok_per_sim_s']:.3f} tok/sim-s), "
-                  f"mean latency {mode['mean_latency_sim']:.2f} sim-s, "
-                  f"wall {mode['wall_s']:.2f}s")
-        print(f"continuous batching speedup: {speedup:.2f}x")
     RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / f"{cfg.name}__trace.json").write_text(json.dumps(out, indent=1))
+    (RESULTS / f"{cfg.name}{tag}.json").write_text(json.dumps(out, indent=1))
     return speedup
 
 

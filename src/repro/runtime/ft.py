@@ -9,6 +9,22 @@ fed by ``report_heartbeat``/``report_step_time``) so it can be driven by a
 real coordinator service on a cluster or by a simulator in tests. Recovery
 composes with :mod:`repro.ckpt.checkpoint` (elastic restore) and the
 step-indexed data pipeline (bit-identical replay).
+
+The second half of the module is the serving engine's durability layer,
+:class:`RequestJournal`, whose invariants are:
+
+* **Replay determinism** — greedy decode means a replay from the journaled
+  prompt reproduces the original tokens bit-for-bit; ``record_token``
+  cross-checks every replayed token against the pre-preemption run and
+  raises on divergence rather than serving silently different output.
+* **FIFO order survives preemption** — ``arrival_seq`` is assigned once at
+  first admission and never reassigned, so ``incomplete()`` always returns
+  the original admission order.
+* **Page-table state is journaled** — ``note_prefix`` records each
+  admission's shared-prefix reuse (token count + pinned page keys); reuse
+  is an optimisation only and must never change the emitted tokens.
+* **In-flight records are never evicted** — ``evict`` refuses to drop a
+  record whose request has not completed (that would lose replay state).
 """
 
 from __future__ import annotations
@@ -161,7 +177,17 @@ class FTController:
 
 @dataclasses.dataclass
 class SlotRecord:
-    """Durable record of one in-flight request (what replay needs)."""
+    """Durable record of one in-flight request (what replay needs).
+
+    ``prefix_reused``/``page_keys`` journal the page-table decision taken
+    at (re-)admission: how many prompt tokens were admitted pre-consumed
+    from shared prefix pages, and which pages were pinned. Reuse never
+    changes the emitted tokens (greedy decode from a correct prefix state
+    is bit-identical to re-running the prefill), so replay stays
+    bit-identical whether or not the replayed admission finds the same
+    pages resident — the fields make every run auditable, and
+    ``record_token`` enforces the invariant.
+    """
 
     request_id: str
     prompt: tuple                  # token ids, immutable for safety
@@ -170,6 +196,8 @@ class SlotRecord:
     generated: list = dataclasses.field(default_factory=list)
     prior: list = dataclasses.field(default_factory=list)  # pre-preemption run
     completed: bool = False
+    prefix_reused: int = 0         # prompt tokens pre-consumed at admission
+    page_keys: tuple = ()          # page-table chain pinned at admission
 
 
 class RequestJournal:
@@ -207,6 +235,16 @@ class RequestJournal:
         self._seq += 1
         self._records[request_id] = rec
         return rec
+
+    def note_prefix(self, request_id: str, tokens_reused: int,
+                    page_keys) -> None:
+        """Journal the page-table state of an admission: how much of the
+        prompt came pre-consumed from shared pages. Recorded per admission
+        (a replay may find more, fewer, or no pages resident — the tokens
+        must come out identical either way)."""
+        rec = self._records[request_id]
+        rec.prefix_reused = int(tokens_reused)
+        rec.page_keys = tuple(tuple(k) for k in page_keys)
 
     def record_token(self, request_id: str, token: int) -> None:
         rec = self._records[request_id]

@@ -14,10 +14,25 @@ Two layers live here:
 * :class:`ContinuousBatchingEngine` — a request-level serving loop: FIFO
   admission queue with backpressure, slot-based batching where new requests
   are prefilled into free decode slots *without stopping in-flight decodes*
-  (prefill is token-granular, so a prefilling slot and a decoding slot ride
-  the same batched step), a per-slot paged cache (one page per slot, donated
-  in-place), and preemption-safe replay through
+  (prefill is chunk-granular: up to ``prefill_chunk`` prompt tokens per slot
+  per step, so a prefilling slot and a decoding slot ride the same batched
+  step), a per-slot lane cache (donated in-place) under an optional
+  :class:`repro.serve.pages.PageTable` that shares prompt-prefix pages
+  across requests, and preemption-safe replay through
   :class:`repro.runtime.ft.RequestJournal`.
+
+Engine invariants (the test suite holds the engine to these):
+
+* **FIFO admission** — requests are admitted to slots, and complete among
+  equal-length requests, strictly in arrival order; preemption re-queues
+  in-flight work at the front in the same order.
+* **Refcounts never negative** — every ``bank_acquire``/``page acquire``
+  is released exactly once (on completion, eviction, or preemption);
+  over-release raises instead of corrupting shared state.
+* **Replay determinism** — decode is greedy, so replay after ``preempt()``
+  reproduces every request's tokens bit-for-bit, with or without prefix
+  sharing and chunked prefill; the journal cross-checks each replayed
+  token and fails loudly on divergence.
 """
 
 from __future__ import annotations
@@ -34,6 +49,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.runtime.ft import RequestJournal
+from repro.serve.pages import PageTable
 from repro.sharding import axes as lx_
 from repro.sharding import params as P
 from repro.sharding import rules as R
@@ -57,6 +73,8 @@ def build_sharded_serve(cfg: ModelConfig, mesh: Mesh, rules: R.Rules,
                         batch: int, max_len: int,
                         prefill_len: int | None = None,
                         fsdp: bool | None = None) -> ShardedServe:
+    """jit + shardings for pod-scale prefill/decode of one model config
+    (used by the dry-run and launch drivers; API unchanged since PR 0)."""
     from repro.train.trainer import _fsdp_auto
 
     decls = registry.decls(cfg)
@@ -131,6 +149,7 @@ ADMIT_LINE = "serve.admit"           # raised per slot admission
 # function per model config (jax then caches compilations by slot count /
 # cache shapes), one reset function globally.
 _STEP_FNS: dict = {}
+_CHUNK_FNS: dict = {}
 _RESET_FN = None
 
 
@@ -145,6 +164,39 @@ def _slot_step_fn(cfg: ModelConfig):
         vstep = jax.vmap(one, in_axes=(None, 0, 0))
         _STEP_FNS[cfg] = jax.jit(vstep, donate_argnums=(1,))
     return _STEP_FNS[cfg]
+
+
+def _chunk_step_fn(cfg: ModelConfig, chunk: int):
+    """Per-slot step feeding up to ``chunk`` tokens in one launch.
+
+    Each lane scans over its token buffer; iterations past the lane's
+    ``count`` are masked out (the cache carry keeps the old values bitwise,
+    so a decode lane with ``count == 1`` is untouched by the padding). The
+    returned token is the argmax after the lane's last *fed* token — for a
+    lane that just consumed its final prompt token, that is its first
+    generated token.
+    """
+    key = (cfg, chunk)
+    if key not in _CHUNK_FNS:
+        def one(params, cache, toks, count):
+            def body(cache, xs):
+                j, tok = xs
+                logits, new_cache = registry.decode_step(params, cfg, cache, tok)
+                out = jnp.argmax(logits, -1)[0].astype(jnp.int32)
+                keep = j < count
+                cache = jax.tree.map(
+                    lambda n, o: jnp.where(keep, n, o), new_cache, cache)
+                return cache, out
+
+            cache, outs = jax.lax.scan(
+                body, cache, (jnp.arange(chunk, dtype=jnp.int32), toks))
+            last = jax.lax.dynamic_index_in_dim(
+                outs, jnp.maximum(count - 1, 0), 0, keepdims=False)
+            return last, cache
+
+        vstep = jax.vmap(one, in_axes=(None, 0, 0, 0))
+        _CHUNK_FNS[key] = jax.jit(vstep, donate_argnums=(1,))
+    return _CHUNK_FNS[key]
 
 
 def _slot_reset_fn():
@@ -188,9 +240,11 @@ class _Slot:
 
     request: Request
     seq: int                 # FIFO sequence number of the request
-    fed: int = 0             # prompt tokens already fed (token-granular prefill)
+    fed: int = 0             # tokens already consumed (prompt, then generated)
     produced: int = 0        # generated tokens so far
     next_token: int = 0      # token to feed at the next engine step
+    page_keys: tuple = ()    # pinned shared-prefix pages (released on evict)
+    pending_snapshot: Any = None   # shared state to copy-on-write at 1st step
 
     @property
     def prefilling(self) -> bool:
@@ -217,13 +271,18 @@ class ContinuousBatchingEngine:
                  platform=None, queue_capacity: int | None = None,
                  clock: Callable[[], float] = lambda: 0.0,
                  journal: RequestJournal | None = None,
-                 pad_token: int = 0):
+                 pad_token: int = 0, prefill_chunk: int = 1,
+                 page_size: int | None = None,
+                 page_table: PageTable | None = None,
+                 page_capacity: int | None = None):
         from repro.core.platform import Platform, XHeepConfig
 
         if slots < 1:
             raise ValueError("engine needs at least one decode slot")
         if max_len < 2:
             raise ValueError("max_len must fit a prompt token plus one output")
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
         self.cfg = cfg
         self.params = params
         self.n_slots = slots
@@ -234,6 +293,22 @@ class ContinuousBatchingEngine:
         self.clock = clock
         self.journal = journal or RequestJournal()
         self.pad_token = pad_token
+        self.prefill_chunk = prefill_chunk
+        # pass `page_table` to share one prefix store across engines (same
+        # cfg/max_len), or just `page_size` for an engine-private table.
+        # The private table is always bounded (every resident page retains a
+        # full max_len cache snapshot); build a PageTable(capacity_pages=
+        # None) yourself if you really want unbounded residency.
+        if page_table is not None:
+            self.pages: PageTable | None = page_table
+        elif page_size:
+            self.pages = PageTable(
+                page_size,
+                capacity_pages=(page_capacity if page_capacity is not None
+                                else 16 * slots),
+                platform=self.platform)
+        else:
+            self.pages = None
 
         self.queue: collections.deque[Request] = collections.deque()
         self._ids: set[str] = set()            # every id ever submitted
@@ -245,10 +320,13 @@ class ContinuousBatchingEngine:
         self.steps = 0
         self.tokens_generated = 0
         self.prompt_tokens_processed = 0
+        self.prompt_tokens_reused = 0
         self.completed: list[Request] = []
         self.rejected = 0
 
         self._step_fn = _slot_step_fn(cfg)
+        self._chunk_fn = (_chunk_step_fn(cfg, prefill_chunk)
+                          if prefill_chunk > 1 else None)
         self._reset_fn = _slot_reset_fn()
         self._page_template = registry.cache_init(cfg, 1, max_len)
         self._cache = self._init_cache()
@@ -303,15 +381,28 @@ class ContinuousBatchingEngine:
             if self.slots[i] is not None:
                 continue
             req = self.queue.popleft()              # FIFO — fairness invariant
-            if i in self._dirty:
+            match = (self.pages.acquire(req.prompt)
+                     if self.pages is not None else None)
+            if match is None and i in self._dirty:
                 self._cache = self._reset_fn(self._cache, i,
                                              self._page_template)
                 self._dirty.discard(i)
             rec = self.journal.open(req.id, req.prompt, req.max_new_tokens)
             req.tokens = []
             req.admit_time = self.clock()
-            self.slots[i] = _Slot(request=req, seq=rec.arrival_seq,
-                                  next_token=req.prompt[0])
+            slot = _Slot(request=req, seq=rec.arrival_seq)
+            if match is not None:
+                # shared prefix admitted pre-consumed: no reset needed (the
+                # snapshot overwrites the whole lane), and the lane copy is
+                # deferred to the first step — copy-on-write, so a slot
+                # preempted before it runs never pays for the copy
+                slot.fed = match.tokens_matched
+                slot.page_keys = match.keys
+                slot.pending_snapshot = match.snapshot
+                self.prompt_tokens_reused += match.tokens_matched
+            slot.next_token = req.prompt[slot.fed]
+            self.journal.note_prefix(req.id, slot.fed, slot.page_keys)
+            self.slots[i] = slot
             # shared refcount wakes the bank if idle
             self.platform.bank_acquire(self._slot_bank[i])
             self.platform.interrupts.fire(ADMIT_LINE, req)
@@ -327,41 +418,97 @@ class ContinuousBatchingEngine:
         return self.active > 0 or bool(self.queue)
 
     def step(self) -> bool:
-        """Admit, then advance every occupied lane one token. False if idle."""
+        """Admit, then advance every occupied lane one scheduling step.
+
+        A decoding lane consumes exactly one token per step; a prefilling
+        lane consumes up to ``prefill_chunk`` prompt tokens (clamped to the
+        next page boundary when prefix sharing is on, so every lane state
+        that completes a page is publishable). Returns False when idle.
+        """
         self._admit()
         if self.active == 0:
             return False
-        toks = np.full((self.n_slots, 1, 1), self.pad_token, np.int32)
+        self._apply_pending_snapshots()
+        chunk = self.prefill_chunk
+        toks = np.full((self.n_slots, chunk, 1, 1), self.pad_token, np.int32)
+        counts = np.zeros((self.n_slots,), np.int32)
         for i, slot in enumerate(self.slots):
-            if slot is not None:
-                toks[i, 0, 0] = slot.next_token
+            if slot is None:
+                continue
+            if slot.prefilling:
+                prompt = slot.request.prompt
+                n = min(chunk, len(prompt) - slot.fed)
+                if self.pages is not None:
+                    n = min(n, self.pages.page_size
+                            - slot.fed % self.pages.page_size)
+                for j in range(n):
+                    toks[i, j, 0, 0] = prompt[slot.fed + j]
+            else:
+                n = 1
+                toks[i, 0, 0, 0] = slot.next_token
+            counts[i] = n
         # empty lanes still ride the batched step (pad token): their pages are
         # garbage afterwards and must be reset before the next admission
         self._dirty.update(i for i, s in enumerate(self.slots) if s is None)
-        nxt, self._cache = self._step_fn(self.params, self._cache,
-                                         jnp.asarray(toks))
+        if chunk == 1 or int(counts.max()) <= 1:
+            # steady-state decode: every lane feeds one token, so skip the
+            # chunk scan (it would run chunk-1 masked iterations per lane)
+            nxt, self._cache = self._step_fn(self.params, self._cache,
+                                             jnp.asarray(toks[:, 0]))
+        else:
+            nxt, self._cache = self._chunk_fn(self.params, self._cache,
+                                              jnp.asarray(toks),
+                                              jnp.asarray(counts))
         nxt = np.asarray(jax.device_get(nxt))
         self.steps += 1
         for i, slot in enumerate(self.slots):
             if slot is None:
                 continue
-            slot.fed += 1
+            was_prefilling = slot.prefilling
+            slot.fed += int(counts[i])
+            if was_prefilling:
+                self.prompt_tokens_processed += int(counts[i])
+                self._maybe_publish(i, slot)
             if slot.prefilling:
                 # still consuming the prompt: teacher-force the next token
                 slot.next_token = slot.request.prompt[slot.fed]
-                self.prompt_tokens_processed += 1
-            else:
-                if slot.fed == len(slot.request.prompt):
-                    self.prompt_tokens_processed += 1
-                tok = int(nxt[i])
-                slot.request.tokens.append(tok)
-                self.journal.record_token(slot.request.id, tok)
-                slot.produced += 1
-                self.tokens_generated += 1
-                slot.next_token = tok
-                if slot.produced >= slot.request.max_new_tokens:
-                    self._complete(i)
+                continue
+            tok = int(nxt[i])
+            slot.request.tokens.append(tok)
+            self.journal.record_token(slot.request.id, tok)
+            slot.produced += 1
+            self.tokens_generated += 1
+            slot.next_token = tok
+            if slot.produced >= slot.request.max_new_tokens:
+                self._complete(i)
         return True
+
+    def _apply_pending_snapshots(self) -> None:
+        """Copy-on-write: a slot admitted onto shared pages borrows them at
+        admission; its private lane copy materialises here, right before
+        the lane writes its first divergent token."""
+        for i, slot in enumerate(self.slots):
+            if slot is None or slot.pending_snapshot is None:
+                continue
+            self._cache = self._reset_fn(self._cache, i,
+                                         slot.pending_snapshot)
+            slot.pending_snapshot = None
+            self._dirty.discard(i)
+            self.pages.note_cow(len(slot.page_keys))
+
+    def _maybe_publish(self, i: int, slot: _Slot) -> None:
+        """Publish lane ``i``'s state when prefill lands on a page boundary
+        (chunk feeds are clamped so boundaries are always hit exactly)."""
+        if self.pages is None:
+            return
+        fed = slot.fed
+        if fed % self.pages.page_size != 0:
+            return
+        key = slot.request.prompt[:fed]
+        if not self.pages.wants(key):
+            return
+        snapshot = jax.tree.map(lambda x: x[i], self._cache)
+        self.pages.publish(key, snapshot)
 
     def _complete(self, i: int) -> None:
         slot = self.slots[i]
@@ -376,6 +523,13 @@ class ContinuousBatchingEngine:
             req.on_complete(req)
 
     def _evict(self, i: int) -> None:
+        slot = self.slots[i]
+        if slot is not None and slot.page_keys:
+            # refcount release — pinned pages outlive the slot only through
+            # the table's own residency, never through this pin
+            self.pages.release(slot.page_keys)
+            slot.page_keys = ()
+            slot.pending_snapshot = None
         self.slots[i] = None
         self._dirty.add(i)
         # shared refcount: gates only when no engine holds the bank
@@ -414,6 +568,8 @@ class ContinuousBatchingEngine:
     # -- convenience ----------------------------------------------------------
 
     def run_until_idle(self, max_steps: int = 100_000) -> None:
+        """Step until queue and slots drain (raises if still busy after
+        ``max_steps`` — a missing-completion canary for tests)."""
         for _ in range(max_steps):
             if not self.step():
                 return
@@ -434,12 +590,21 @@ class ContinuousBatchingEngine:
         return done
 
     def stats(self) -> dict:
-        return {
+        """Lifetime counters (monotone), plus page-table stats when the
+        paged prefix cache is enabled."""
+        out = {
             "steps": self.steps,
             "tokens_generated": self.tokens_generated,
             "prompt_tokens_processed": self.prompt_tokens_processed,
+            "prompt_tokens_reused": self.prompt_tokens_reused,
+            "prefill_chunk": self.prefill_chunk,
             "completed": len(self.completed),
             "rejected": self.rejected,
             "queued": len(self.queue),
             "active": self.active,
         }
+        if self.pages is not None:
+            out["pages"] = dict(self.pages.stats,
+                                resident=self.pages.resident,
+                                pinned=self.pages.pinned)
+        return out

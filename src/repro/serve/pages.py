@@ -1,0 +1,265 @@
+"""Paged prefix cache: refcounted KV pages shared across requests.
+
+The engine's device cache is one lane per decode slot; this module is the
+host-side page table layered on top of it, the serving rendition of the
+paper's refcounted memory banks. A *page* is the model state after
+consuming a fixed-size extent of ``page_size`` prompt tokens: pages chain
+(page *k* of a prompt extends page *k-1*), and a request whose prompt
+starts with an already-resident chain is admitted with those tokens
+pre-consumed — no prefill work for the shared prefix.
+
+Sharing follows the ``Platform.bank_acquire``/``bank_release`` discipline:
+
+* **Refcounts never go negative.** ``acquire`` pins every page of the
+  matched chain; ``release`` unpins; releasing more than was acquired
+  raises (exactly like over-releasing a bank).
+* **A referenced page is never freed.** LRU eviction only considers pages
+  with zero refs *and* no resident children — pinning a leaf transitively
+  protects its ancestors through the child links.
+* **Copy-on-write.** ``acquire`` hands out the shared snapshot without
+  copying; the engine materialises a private lane copy only when the slot
+  first writes a divergent token (its first step), and reports that event
+  back through :meth:`PageTable.note_cow`. A request evicted before its
+  first step never pays for the copy.
+* **Power-aware residency.** With a platform attached, each resident page
+  holds one refcounted bank acquisition (round-robin over the platform's
+  banks), so banks retaining shared pages stay awake and eviction of the
+  last page on a bank lets it clock-gate again.
+
+Invariants (checked by ``tests/test_pages.py``): refcounts never negative,
+eviction never frees a referenced page or a page with resident children,
+``acquire`` always leaves at least one prompt token to feed (the final
+token must run through the model to produce the first output logits), and
+reuse never changes emitted tokens — greedy decode from a correct prefix
+state is bit-identical to re-running the prefill.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+__all__ = ["Page", "PrefixMatch", "PageTable"]
+
+
+@dataclasses.dataclass
+class Page:
+    """One resident page: the state after consuming ``key`` tokens.
+
+    ``key`` is the full consumed-token prefix (length a multiple of the
+    table's ``page_size``; the page's own extent is its last ``page_size``
+    tokens). ``snapshot`` is an opaque batch-1 cache pytree owned by the
+    table until eviction.
+    """
+
+    key: tuple
+    snapshot: Any
+    refs: int = 0          # live slot pins (acquire/release)
+    children: int = 0      # resident pages extending this chain
+    bank: str | None = None
+    last_used: int = 0     # LRU tick
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixMatch:
+    """Result of :meth:`PageTable.acquire`: a pinned chain of pages."""
+
+    tokens_matched: int          # prompt tokens covered by the chain
+    snapshot: Any                # state after consuming tokens_matched tokens
+    keys: tuple                  # chain keys, shortest first (release handle)
+
+
+class PageTable:
+    """Host-side table of shared prefix pages with bank-style refcounts.
+
+    ``capacity_pages`` bounds residency; ``platform`` (optional) wires page
+    residency into the platform's shared bank refcounts so resident pages
+    keep their memory bank awake. One table serves one (model config,
+    ``max_len``) pair — snapshots are shape-compatible only within it.
+    """
+
+    def __init__(self, page_size: int, *, capacity_pages: int | None = None,
+                 platform=None):
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1 token")
+        if capacity_pages is not None and capacity_pages < 1:
+            raise ValueError("capacity_pages must be >= 1")
+        self.page_size = page_size
+        self.capacity_pages = capacity_pages
+        self.platform = platform
+        self._pages: dict[tuple, Page] = {}
+        self._tick = 0
+        self._next_bank = 0
+        self.stats = {
+            "hits": 0,             # acquisitions that matched a chain
+            "misses": 0,           # acquisitions with no usable chain
+            "tokens_reused": 0,    # prompt tokens skipped via sharing
+            "published": 0,        # pages added
+            "evicted": 0,          # pages LRU-evicted
+            "cow_copies": 0,       # private lane copies materialised
+        }
+
+    # -- lookup / pinning ----------------------------------------------------
+
+    def _chain_keys(self, prompt: Sequence[int]) -> list[tuple]:
+        """Resident chain keys covering a prefix of ``prompt``, shortest
+        first. Caps at ``len(prompt) - 1``: the final prompt token is always
+        fed through the model (its logits seed generation)."""
+        prompt = tuple(int(t) for t in prompt)
+        ps = self.page_size
+        keys = []
+        for k in range(1, (len(prompt) - 1) // ps + 1):
+            key = prompt[:k * ps]
+            if key not in self._pages:
+                break
+            keys.append(key)
+        return keys
+
+    def lookup(self, prompt: Sequence[int]) -> int:
+        """Prompt tokens a matching resident chain covers (0 = no match).
+        Pure query: no refcounts, no stats."""
+        keys = self._chain_keys(prompt)
+        return len(keys[-1]) if keys else 0
+
+    def acquire(self, prompt: Sequence[int]) -> PrefixMatch | None:
+        """Pin the longest resident chain matching ``prompt``'s prefix.
+
+        Every page of the chain is individually refcounted; the caller must
+        hand the returned ``keys`` back to :meth:`release` exactly once
+        (on completion, eviction, or preemption)."""
+        keys = self._chain_keys(prompt)
+        if not keys:
+            self.stats["misses"] += 1
+            return None
+        self._tick += 1
+        for key in keys:
+            page = self._pages[key]
+            page.refs += 1
+            page.last_used = self._tick
+        matched = len(keys[-1])
+        self.stats["hits"] += 1
+        self.stats["tokens_reused"] += matched
+        return PrefixMatch(tokens_matched=matched,
+                           snapshot=self._pages[keys[-1]].snapshot,
+                           keys=tuple(keys))
+
+    def release(self, keys: Sequence[tuple]) -> None:
+        """Unpin a chain previously returned by :meth:`acquire`.
+
+        Mirrors ``Platform.bank_release``: releasing a page more times than
+        it was acquired raises instead of driving the refcount negative."""
+        for key in keys:
+            page = self._pages.get(key)
+            if page is None or page.refs <= 0:
+                raise ValueError(
+                    f"page {key!r} released more than acquired")
+            page.refs -= 1
+
+    def note_cow(self, n_pages: int) -> None:
+        """Record that a slot materialised its private copy of ``n_pages``
+        shared pages (the copy-on-write event, fired at first divergent
+        token)."""
+        self.stats["cow_copies"] += int(n_pages)
+
+    # -- publication / eviction ----------------------------------------------
+
+    def wants(self, key: Sequence[int]) -> bool:
+        """True if :meth:`publish` would accept ``key`` — lets the engine
+        skip the device gather when the page is already resident."""
+        key = tuple(int(t) for t in key)
+        if not key or len(key) % self.page_size != 0:
+            return False
+        if key in self._pages:
+            return False
+        return len(key) == self.page_size or key[:-self.page_size] in self._pages
+
+    def publish(self, key: Sequence[int], snapshot: Any) -> bool:
+        """Add the page completing chain ``key`` (state after consuming all
+        of ``key``). Returns False when the page is already resident or its
+        parent chain is gone (nothing to graft onto)."""
+        key = tuple(int(t) for t in key)
+        if not key or len(key) % self.page_size != 0:
+            raise ValueError(
+                f"page key length {len(key)} is not a positive multiple of "
+                f"page_size={self.page_size}")
+        self._tick += 1
+        if key in self._pages:
+            self._pages[key].last_used = self._tick
+            return False
+        parent = None
+        if len(key) > self.page_size:
+            parent = self._pages.get(key[:-self.page_size])
+            if parent is None:
+                return False         # orphan extent: chain must be contiguous
+        self._make_room(protect=parent)
+        page = Page(key=key, snapshot=snapshot,
+                    last_used=self._tick, bank=self._assign_bank())
+        self._pages[key] = page
+        if parent is not None:
+            parent.children += 1
+        self.stats["published"] += 1
+        return True
+
+    def _assign_bank(self) -> str | None:
+        if self.platform is None:
+            return None
+        n = self.platform.config.n_banks
+        bank = f"bank{self._next_bank % n}"
+        self._next_bank += 1
+        self.platform.bank_acquire(bank)   # resident page keeps its bank awake
+        return bank
+
+    def _make_room(self, protect: Page | None = None) -> None:
+        """Evict down below capacity before an insert. Only unpinned leaves
+        are candidates (refs > 0 is a live slot pin, children > 0 means a
+        resident page still needs this state, and the incoming page's
+        parent must survive to keep the chain contiguous). When everything
+        is pinned the table overflows instead of freeing a referenced page.
+        """
+        if self.capacity_pages is None:
+            return
+        while len(self._pages) >= self.capacity_pages:
+            candidates = [p for p in self._pages.values()
+                          if p.refs == 0 and p.children == 0
+                          and p is not protect]
+            if not candidates:
+                return
+            self._drop(min(candidates, key=lambda p: p.last_used))
+            self.stats["evicted"] += 1
+
+    def _drop(self, page: Page) -> None:
+        del self._pages[page.key]
+        if len(page.key) > self.page_size:
+            self._pages[page.key[:-self.page_size]].children -= 1
+        if page.bank is not None:
+            self.platform.bank_release(page.bank)
+
+    def clear(self) -> None:
+        """Drop every unpinned page (pinned chains survive)."""
+        for page in sorted(self._pages.values(),
+                           key=lambda p: -len(p.key)):   # leaves first
+            if page.refs == 0 and page.children == 0:
+                self._drop(page)
+                self.stats["evicted"] += 1
+
+    # -- introspection --------------------------------------------------------
+
+    @property
+    def resident(self) -> int:
+        """Number of resident pages."""
+        return len(self._pages)
+
+    @property
+    def pinned(self) -> int:
+        """Number of pages with a live slot pin."""
+        return sum(p.refs > 0 for p in self._pages.values())
+
+    def refcounts(self) -> dict[tuple, int]:
+        """Snapshot of per-page refcounts (for tests and the journal)."""
+        return {k: p.refs for k, p in self._pages.items()}
+
+    def __contains__(self, key) -> bool:
+        return tuple(key) in self._pages
+
+    def __len__(self) -> int:
+        return len(self._pages)

@@ -12,6 +12,18 @@ The same harness drives two admission policies:
 * ``sequential=True``  — one-request-at-a-time serving: the next request is
   only handed to the engine when it is completely idle. This is the
   baseline the paper's interrupt-driven overlap is measured against.
+
+Trace generators: :func:`staggered_trace` (arrivals ``gap`` apart),
+:func:`burst_trace` (everything at once), and
+:func:`shared_prefix_requests` (a multi-tenant workload where every
+request's prompt starts with the same prefix — the page-table reuse
+workload; with prefix sharing enabled only the first request prefills the
+shared pages).
+
+Invariants the harness preserves: no wall clock or randomness anywhere, so
+every report is exactly reproducible; same-time arrivals are delivered in
+trace order (FIFO admission is observable end-to-end); and a reused engine
+reports per-run deltas, never cumulative lifetime counters.
 """
 
 from __future__ import annotations
@@ -33,11 +45,13 @@ class FakeClock:
         return self.t
 
     def advance(self, dt: float) -> None:
+        """Move time forward by ``dt`` (negative ``dt`` raises)."""
         if dt < 0:
             raise ValueError("time cannot run backwards")
         self.t += dt
 
     def advance_to(self, t: float) -> None:
+        """Jump forward to ``t`` (never backwards)."""
         self.t = max(self.t, float(t))
 
 
@@ -56,6 +70,29 @@ def staggered_trace(requests: Sequence[Request], start: float = 0.0,
 def burst_trace(requests: Sequence[Request], at: float = 0.0) -> list[Arrival]:
     """Everything at once — the saturation workload."""
     return [Arrival(at, r) for r in requests]
+
+
+def shared_prefix_requests(n: int, *, prefix_len: int = 64,
+                           tail_len: int = 4, new_tokens: int = 8,
+                           prefix: Sequence[int] | None = None,
+                           id_prefix: str = "shared") -> list[Request]:
+    """``n`` requests whose prompts share one ``prefix_len``-token prefix.
+
+    The shared-prefix serving workload (a common system prompt, a shared
+    document, a RAG template): tails are distinct per request, so outputs
+    diverge after the prefix. Deterministic — same arguments, same
+    requests. Pass an explicit ``prefix`` to pin the shared tokens.
+    """
+    if prefix is None:
+        prefix = [(13 * j) % 241 + 1 for j in range(prefix_len)]
+    prefix = [int(t) for t in prefix]
+    return [
+        Request(id=f"{id_prefix}{i}",
+                prompt=prefix + [(17 * i + 5 * j) % 239 + 1
+                                 for j in range(tail_len)],
+                max_new_tokens=new_tokens)
+        for i in range(n)
+    ]
 
 
 @dataclasses.dataclass
@@ -100,6 +137,8 @@ class Simulator:
                 break                    # at most one request in flight
 
     def run(self, max_steps: int = 1_000_000) -> SimReport:
+        """Deliver arrivals and step the engine until the trace drains;
+        returns this run's deltas (a reused engine never double-counts)."""
         eng = self.engine
         # snapshot the engine's lifetime counters: a reused engine must
         # report this run's deltas, not cumulative totals over stale time

@@ -15,13 +15,14 @@ from repro.core.platform import Platform, XHeepConfig
 from repro.models import registry
 from repro.serve.engine import ContinuousBatchingEngine, Request
 from repro.serve.sim import (Arrival, FakeClock, SimReport, Simulator,
-                             burst_trace, staggered_trace)
+                             burst_trace, shared_prefix_requests,
+                             staggered_trace)
 from repro.sharding import params as P
 
 __all__ = [
     "Arrival", "FakeClock", "SimReport", "Simulator", "burst_trace",
-    "staggered_trace", "Request", "make_engine", "make_requests",
-    "run_trace", "smoke_params",
+    "shared_prefix_requests", "staggered_trace", "Request", "make_engine",
+    "make_requests", "run_trace", "smoke_params",
 ]
 
 _PARAM_CACHE: dict[str, tuple] = {}
@@ -40,8 +41,12 @@ def smoke_params(arch: str = "granite_3_2b", seed: int = 0):
 def make_engine(arch: str = "granite_3_2b", *, slots: int = 3,
                 max_len: int = 32, clock: FakeClock | None = None,
                 platform: Platform | None = None, n_banks: int | None = None,
-                queue_capacity: int | None = None):
-    """A tiny engine on a fake clock. Returns (engine, clock)."""
+                queue_capacity: int | None = None, **engine_kwargs):
+    """A tiny engine on a fake clock. Returns (engine, clock).
+
+    Extra keyword arguments (``prefill_chunk``, ``page_size``, ...) pass
+    through to :class:`ContinuousBatchingEngine`.
+    """
     cfg, params = smoke_params(arch)
     clock = clock or FakeClock()
     if platform is None and n_banks is not None:
@@ -50,7 +55,8 @@ def make_engine(arch: str = "granite_3_2b", *, slots: int = 3,
             platform.power.clock_gate(f"bank{i}")
     eng = ContinuousBatchingEngine(cfg, params, slots=slots, max_len=max_len,
                                    clock=clock, platform=platform,
-                                   queue_capacity=queue_capacity)
+                                   queue_capacity=queue_capacity,
+                                   **engine_kwargs)
     return eng, clock
 
 
@@ -67,10 +73,10 @@ def make_requests(n: int, *, prompt_len: int = 3, new_tokens: int = 4,
 
 def run_trace(arch: str, trace, *, slots: int = 3, max_len: int = 32,
               sequential: bool = False, step_time: float = 1.0,
-              queue_capacity: int | None = None):
+              queue_capacity: int | None = None, **engine_kwargs):
     """Build a fresh engine, run the trace to completion. (engine, report)."""
     eng, clock = make_engine(arch, slots=slots, max_len=max_len,
-                             queue_capacity=queue_capacity)
+                             queue_capacity=queue_capacity, **engine_kwargs)
     sim = Simulator(eng, trace, clock, step_time=step_time,
                     sequential=sequential)
     return eng, sim.run()

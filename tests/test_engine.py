@@ -13,7 +13,8 @@ import jax.numpy as jnp
 import pytest
 
 from engine_sim import (FakeClock, Request, Simulator, burst_trace,
-                        make_engine, make_requests, run_trace, smoke_params,
+                        make_engine, make_requests, run_trace,
+                        shared_prefix_requests, smoke_params,
                         staggered_trace)
 from repro.core.power import PowerState
 from repro.models import registry
@@ -76,6 +77,50 @@ def test_engine_matches_raw_batch1_decode():
     eng.submit(Request(id="x", prompt=prompt, max_new_tokens=new))
     eng.run_until_idle()
     assert eng.completed[0].tokens == raw
+
+
+def test_chunked_prefill_bit_identical_and_fewer_steps():
+    """``prefill_chunk > 1`` consumes long prompts in fewer scheduling
+    steps without perturbing a single output token."""
+    trace = lambda: staggered_trace(make_requests(5, prompt_len=9), gap=1.0)
+    base_eng, base = run_trace("granite_3_2b", trace(), slots=2)
+    chunk_eng, chunked = run_trace("granite_3_2b", trace(), slots=2,
+                                   prefill_chunk=4)
+    assert _tokens(chunk_eng) == _tokens(base_eng)
+    assert chunked.steps < base.steps
+    assert chunked.tokens_generated == base.tokens_generated
+
+
+def test_sharing_and_chunked_prefill_bit_identical_to_sequential():
+    """The full tentpole configuration — prefix sharing + chunked prefill —
+    against the one-request-at-a-time no-sharing baseline: outputs must be
+    bit-identical, sim-clock throughput strictly higher."""
+    trace = lambda: staggered_trace(
+        shared_prefix_requests(6, prefix_len=16, tail_len=3, new_tokens=4),
+        gap=1.0)
+    seq_eng, seq = run_trace("granite_3_2b", trace(), slots=2, max_len=40,
+                             sequential=True)
+    eng, rep = run_trace("granite_3_2b", trace(), slots=2, max_len=40,
+                         page_size=8, prefill_chunk=4)
+    assert _tokens(eng) == _tokens(seq_eng)
+    assert rep.throughput > seq.throughput
+    assert eng.stats()["pages"]["tokens_reused"] > 0
+
+
+def test_decode_cadence_survives_chunked_prefill():
+    """A decoding lane still emits exactly one token per step while another
+    lane chunk-prefills a long prompt next to it."""
+    eng, _ = make_engine(slots=2, prefill_chunk=4)
+    first = Request(id="first", prompt=[3, 1], max_new_tokens=10)
+    eng.submit(first)
+    eng.step()                                 # past the 2-token prompt
+    eng.submit(Request(id="big", prompt=list(range(1, 13)),
+                       max_new_tokens=2))
+    produced = []
+    for _ in range(9):
+        eng.step()
+        produced.append(len(first.tokens))
+    assert [b - a for a, b in zip(produced, produced[1:])] == [1] * 8
 
 
 # -- scheduler invariants ------------------------------------------------------

@@ -1,0 +1,231 @@
+"""Paged prefix cache: refcount lifecycle, eviction safety, engine reuse.
+
+Two layers of tests:
+
+* Pure :class:`repro.serve.pages.PageTable` unit tests — snapshots are
+  opaque objects, no jax involved — pinning discipline, LRU eviction that
+  never frees a referenced page, negative-refcount errors, bank wiring.
+* Engine integration under the deterministic sim harness — shared-prefix
+  admission skips prefill work, outputs stay bit-identical to the
+  no-sharing sequential baseline, and evict/complete/preempt release every
+  pinned page exactly once (replay after ``preempt()`` is bit-identical
+  with sharing enabled).
+"""
+
+import pytest
+
+from engine_sim import (FakeClock, Request, Simulator, burst_trace,
+                        make_engine, run_trace, shared_prefix_requests,
+                        staggered_trace)
+from repro.core.platform import Platform, XHeepConfig
+from repro.core.power import PowerState
+from repro.serve.pages import PageTable
+
+
+def _tokens(eng_or_report):
+    done = getattr(eng_or_report, "completed")
+    return {r.id: tuple(r.tokens) for r in done}
+
+
+# -- PageTable unit behaviour (snapshots are opaque; no jax) -------------------
+
+
+def test_publish_acquire_roundtrip_longest_chain():
+    t = PageTable(4)
+    prompt = tuple(range(1, 14))           # 13 tokens -> 3 full pages
+    assert t.acquire(prompt) is None       # empty table: miss
+    assert t.publish(prompt[:4], "s4")
+    assert t.publish(prompt[:8], "s8")
+    assert not t.publish(prompt[:8], "other")   # already resident
+    m = t.acquire(prompt)
+    assert m.tokens_matched == 8 and m.snapshot == "s8"
+    assert m.keys == (prompt[:4], prompt[:8])
+    assert t.refcounts() == {prompt[:4]: 1, prompt[:8]: 1}
+    t.release(m.keys)
+    assert all(r == 0 for r in t.refcounts().values())
+    assert t.stats["hits"] == 1 and t.stats["misses"] == 1
+    assert t.stats["tokens_reused"] == 8
+
+
+def test_acquire_always_leaves_final_token_to_feed():
+    """A full-prompt match may not be consumed whole: the last prompt token
+    must run through the model to produce the first output logits."""
+    t = PageTable(4)
+    t.publish((1, 2, 3, 4), "s")
+    t.publish((1, 2, 3, 4, 5, 6, 7, 8), "s8")
+    m = t.acquire((1, 2, 3, 4, 5, 6, 7, 8))   # prompt == resident chain
+    assert m.tokens_matched == 4               # capped at len(prompt) - 1
+    t.release(m.keys)
+
+
+def test_chain_must_be_contiguous():
+    t = PageTable(4)
+    assert not t.publish((1, 2, 3, 4, 5, 6, 7, 8), "orphan")  # no parent
+    assert t.resident == 0
+    with pytest.raises(ValueError, match="multiple of page_size"):
+        t.publish((1, 2, 3), "short")
+
+
+def test_release_more_than_acquired_raises():
+    t = PageTable(2)
+    t.publish((1, 2), "s")
+    m = t.acquire((1, 2, 3))
+    t.release(m.keys)
+    with pytest.raises(ValueError, match="released more than acquired"):
+        t.release(m.keys)                     # refcounts never go negative
+
+
+def test_lru_eviction_never_frees_pinned_or_parent_pages():
+    t = PageTable(2, capacity_pages=2)
+    t.publish((1, 2), "a")
+    t.publish((1, 2, 3, 4), "b")              # chain a->b, at capacity
+    m = t.acquire((1, 2, 3, 4, 9))            # pin both pages
+    t.publish((7, 8), "c")                    # over capacity, but a/b pinned
+    assert t.resident == 3                    # overflow rather than free
+    assert (1, 2) in t and (1, 2, 3, 4) in t
+    t.release(m.keys)
+    t.publish((5, 6), "d")                    # now unpinned leaves can go
+    assert t.resident <= 2
+    # a parent with a resident child is never the eviction victim
+    assert ((1, 2, 3, 4) in t) <= ((1, 2) in t)
+
+
+def test_lru_prefers_oldest_unpinned_leaf():
+    t = PageTable(2, capacity_pages=2)
+    t.publish((1, 2), "a")
+    t.publish((3, 4), "b")
+    t.acquire((3, 4, 5))                      # touch + pin b
+    t.publish((5, 6), "c")                    # evicts a (oldest unpinned)
+    assert (1, 2) not in t and (3, 4) in t and (5, 6) in t
+    assert t.stats["evicted"] == 1
+
+
+def test_resident_pages_hold_bank_refcounts():
+    platform = Platform(XHeepConfig(n_banks=2))
+    for i in range(2):
+        platform.power.clock_gate(f"bank{i}")
+    t = PageTable(2, capacity_pages=2, platform=platform)
+    t.publish((1, 2), "a")                    # bank0 wakes for the page
+    assert platform.power.state("bank0") is PowerState.ON
+    assert platform.power.state("bank1") is PowerState.CLOCK_GATED
+    t.publish((1, 2, 3, 4), "b")              # round-robin -> bank1
+    assert platform.power.state("bank1") is PowerState.ON
+    t.publish((5, 6), "c")                    # evicts LRU leaf -> releases
+    assert t.resident == 2
+    t.clear()                                 # drop everything unpinned
+    assert t.resident == 0
+    assert platform.power.state("bank0") is PowerState.CLOCK_GATED
+    assert platform.power.state("bank1") is PowerState.CLOCK_GATED
+
+
+def test_clear_keeps_pinned_chains():
+    t = PageTable(2)
+    t.publish((1, 2), "a")
+    t.publish((3, 4), "b")
+    m = t.acquire((1, 2, 9))
+    t.clear()
+    assert (1, 2) in t and (3, 4) not in t
+    t.release(m.keys)
+
+
+# -- engine integration: sharing is invisible in the outputs -------------------
+
+
+def _shared_trace(n=6, prefix_len=16, tail_len=3, new_tokens=4):
+    return burst_trace(shared_prefix_requests(
+        n, prefix_len=prefix_len, tail_len=tail_len, new_tokens=new_tokens))
+
+
+def test_shared_prefix_reuses_pages_and_stays_bit_identical():
+    base_eng, base = run_trace("granite_3_2b", _shared_trace(), slots=2,
+                               max_len=40, sequential=True)
+    eng, rep = run_trace("granite_3_2b", _shared_trace(), slots=2,
+                         max_len=40, page_size=8, prefill_chunk=4)
+    assert _tokens(eng) == _tokens(base_eng)
+    assert rep.steps < base.steps
+    st = eng.stats()["pages"]
+    assert st["hits"] >= 4 and st["tokens_reused"] >= 4 * 16
+    assert eng.prompt_tokens_reused == st["tokens_reused"]
+    # the reused tokens were genuinely not re-processed
+    total_prompt = sum(len(r.prompt) for r in eng.completed)
+    assert eng.prompt_tokens_processed == total_prompt - eng.prompt_tokens_reused
+
+
+def test_refcounts_drain_on_complete_and_pages_stay_resident():
+    eng, clock = make_engine(slots=2, max_len=40, page_size=8)
+    Simulator(eng, _shared_trace(4), clock).run()
+    assert eng.pages.pinned == 0               # every pin released
+    assert all(r == 0 for r in eng.pages.refcounts().values())
+    assert eng.pages.resident > 0              # pages survive for reuse
+    hits0 = eng.pages.stats["hits"]
+    # a second wave over the same prefix hits the warm table immediately
+    Simulator(eng, burst_trace(shared_prefix_requests(
+        3, prefix_len=16, tail_len=3, new_tokens=4, id_prefix="w2")),
+        clock).run()
+    assert eng.pages.stats["hits"] >= hits0 + 3
+    assert eng.pages.pinned == 0
+
+
+def test_preempt_releases_pages_and_replay_is_bit_identical():
+    base_eng, _ = run_trace("granite_3_2b", _shared_trace(5), slots=2,
+                            max_len=40, sequential=True)
+    eng, _ = make_engine(slots=2, max_len=40, page_size=8, prefill_chunk=4)
+    for r in shared_prefix_requests(5, prefix_len=16, tail_len=3,
+                                    new_tokens=4):
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()                             # mid-flight, pages pinned
+    requeued = eng.preempt()
+    assert requeued and eng.active == 0
+    assert eng.pages.pinned == 0               # preempt released every pin
+    assert all(r == 0 for r in eng.pages.refcounts().values())
+    eng.run_until_idle()                       # replay (journal cross-checks)
+    assert _tokens(eng) == _tokens(base_eng)
+    # the replayed admissions found the pre-preemption pages resident
+    assert all(rec.prefix_reused == 16 for rec in eng.journal.completed())
+
+
+def test_journal_records_page_table_state():
+    eng, clock = make_engine(slots=2, max_len=40, page_size=8)
+    Simulator(eng, _shared_trace(4), clock).run()
+    recs = {r.request_id: r for r in eng.journal.completed()}
+    assert recs["shared0"].prefix_reused == 0          # first: cold table
+    assert recs["shared3"].prefix_reused == 16         # warm: two pages
+    assert len(recs["shared3"].page_keys) == 2
+    assert all(len(k) % 8 == 0 for k in recs["shared3"].page_keys)
+
+
+def test_tiny_capacity_never_breaks_inflight_requests():
+    """Even a one-page table (constant thrash) serves correct output and
+    never underflows a refcount."""
+    base_eng, _ = run_trace("granite_3_2b", _shared_trace(4), slots=2,
+                            max_len=40, sequential=True)
+    eng, _ = run_trace("granite_3_2b", _shared_trace(4), slots=2, max_len=40,
+                       page_size=8, page_capacity=1)
+    assert _tokens(eng) == _tokens(base_eng)
+    assert eng.pages.pinned == 0
+
+
+def test_shared_table_across_engines():
+    """Two engines over one PageTable: the second engine's requests reuse
+    pages the first engine published."""
+    from engine_sim import smoke_params
+    from repro.serve.engine import ContinuousBatchingEngine
+
+    cfg, params = smoke_params("granite_3_2b")
+    table = PageTable(8)
+    reqs = lambda p: shared_prefix_requests(2, prefix_len=16, tail_len=3,
+                                            new_tokens=4, id_prefix=p)
+    e1 = ContinuousBatchingEngine(cfg, params, slots=1, max_len=40,
+                                  clock=FakeClock(), page_table=table)
+    for r in reqs("a"):
+        e1.submit(r)
+    e1.run_until_idle()
+    assert table.resident > 0
+    e2 = ContinuousBatchingEngine(cfg, params, slots=1, max_len=40,
+                                  clock=FakeClock(), page_table=table)
+    for r in reqs("b"):
+        e2.submit(r)
+    e2.run_until_idle()
+    assert all(rec.prefix_reused == 16 for rec in e2.journal.completed())
+    assert table.pinned == 0

@@ -1,0 +1,96 @@
+"""Docs gate: intra-repo links must resolve, public serve API documented.
+
+Run as ``make docs-check`` (also a prerequisite of ``make test-fast``).
+Checks, failing the build with a listing of every violation:
+
+1. Every relative markdown link in README.md and docs/**/*.md points at a
+   file or directory that exists (anchors and external URLs are skipped;
+   ``path#fragment`` is checked for the ``path`` part).
+2. Every public class and function defined in the ``repro.serve.*``
+   modules carries a docstring — the serving engine is the repo's primary
+   user-facing API and must stay self-describing.
+"""
+
+from __future__ import annotations
+
+import importlib
+import inspect
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+# [text](target) — excluding images handled identically, so one pattern
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+SERVE_MODULES = ("repro.serve.engine", "repro.serve.pages", "repro.serve.sim")
+
+
+def _doc_files() -> list[pathlib.Path]:
+    files = [REPO / "README.md"]
+    docs = REPO / "docs"
+    if docs.is_dir():
+        files.extend(sorted(docs.rglob("*.md")))
+    return [f for f in files if f.exists()]
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in _doc_files():
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            for target in _LINK.findall(line):
+                if target.startswith(_EXTERNAL) or target.startswith("#"):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                resolved = (md.parent / path).resolve()
+                if not resolved.exists():
+                    rel = md.relative_to(REPO)
+                    errors.append(f"{rel}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def check_serve_docstrings() -> list[str]:
+    errors = []
+    for modname in SERVE_MODULES:
+        mod = importlib.import_module(modname)
+        if not (mod.__doc__ or "").strip():
+            errors.append(f"{modname}: missing module docstring")
+        for name, obj in vars(mod).items():
+            if name.startswith("_"):
+                continue
+            if not (inspect.isclass(obj) or inspect.isfunction(obj)):
+                continue
+            if getattr(obj, "__module__", None) != modname:
+                continue        # re-export; documented where it is defined
+            if not (obj.__doc__ or "").strip():
+                errors.append(f"{modname}.{name}: missing docstring")
+            if inspect.isclass(obj):
+                for mname, meth in vars(obj).items():
+                    if mname.startswith("_") or not callable(meth):
+                        continue
+                    if not (getattr(meth, "__doc__", None) or "").strip():
+                        errors.append(
+                            f"{modname}.{name}.{mname}: missing docstring")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_serve_docstrings()
+    if errors:
+        print(f"docs-check: {len(errors)} problem(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    n_files = len(_doc_files())
+    print(f"docs-check: OK ({n_files} doc file(s), "
+          f"{len(SERVE_MODULES)} serve modules)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
