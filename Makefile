@@ -17,10 +17,16 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 BENCH_PASSTHRU = $(filter-out bench-serve,$(MAKECMDGOALS))
 
-.PHONY: test-fast test-all bench-serve docs-check
+.PHONY: test-fast test-all bench-serve bench-json docs-check
 
+# Fast tier compiles at XLA opt level 0: the suite is compile-bound (tiny
+# smoke models, hundreds of small programs) and every correctness assertion
+# is backend-consistent (bit-identity is always engine-vs-engine within one
+# process; kernel parity uses tolerances). The full tier-1 gate (test-all)
+# keeps full optimization fidelity.
 test-fast: docs-check
-	$(PY) -m pytest -q -m "not slow"
+	XLA_FLAGS="--xla_backend_optimization_level=0 $$XLA_FLAGS" \
+		$(PY) -m pytest -q -m "not slow"
 
 test-all:
 	$(PY) -m pytest -x -q
@@ -28,6 +34,15 @@ test-all:
 bench-serve:
 	$(PY) benchmarks/serve_bench.py --requests 16 --slots 4 --gap 2.0 \
 		--new-tokens 8 $(BENCH_PASSTHRU) $(BENCH_ARGS)
+
+# BENCH_serve.json artifact: default trace + shared-prefix trace + paged
+# kernel microbench, merged into one JSON tracked across PRs
+bench-json:
+	$(PY) benchmarks/serve_bench.py --requests 16 --slots 4 --gap 2.0 \
+		--new-tokens 8 --json --bench-json
+	$(PY) benchmarks/serve_bench.py --requests 16 --slots 4 --gap 2.0 \
+		--new-tokens 8 --shared-prefix --json --bench-json
+	$(PY) benchmarks/serve_bench.py --slots 4 --kernel-bench --json --bench-json
 
 docs-check:
 	$(PY) tools/docs_check.py

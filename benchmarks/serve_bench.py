@@ -1,15 +1,26 @@
-"""Arrivals-trace serving benchmark: continuous batching, prefix sharing.
+"""Arrivals-trace serving benchmark: paged decode + async dispatch vs PR 2.
 
 Replays a deterministic trace of staggered request arrivals through the
 continuous-batching engine and reports tokens/s on the simulation clock
-plus wall-clock step latency. Two modes:
+plus wall-clock step latency. The sim cost model charges ``--dispatch-time``
+of host scheduling plus ``--step-time`` of device compute per engine step;
+a synchronous engine pays them serially, the async double-buffered engine
+overlaps them (see :class:`repro.serve.sim.Simulator`). Modes:
 
-* default — continuous batching vs one-request-at-a-time serving (the
-  PR 1 headline comparison).
+* default — the new engine (paged KV pool + async dispatch) vs the PR 2
+  engine (per-slot cache lanes, synchronous dispatch) vs one-request-at-a-
+  time serving, all on the same trace. Outputs are asserted bit-identical
+  across all three before any number is reported.
 * ``--shared-prefix [N]`` — every request's prompt shares an N-token
-  prefix (default 64); the engine with the paged prefix cache enabled is
-  compared against the same engine with no sharing. Combine with
-  ``--prefill-chunk`` / ``--page-size`` to explore the schedule.
+  prefix; paged sharing (block-table adoption, mid-flight re-match, cold-
+  prefill dedup) is compared against the same engine with sharing off and
+  against the PR 2 sharing engine.
+* ``--kernel-bench`` — microbenchmark of the fused paged-attention Pallas
+  kernel (interpret mode on CPU) against its pure-jax reference.
+
+``--json`` prints the report as JSON; ``--bench-json`` additionally merges
+it into ``BENCH_serve.json`` at the repo root (``make bench-json`` runs all
+three modes), so the perf trajectory is tracked across PRs.
 
   PYTHONPATH=src python benchmarks/serve_bench.py --arch granite-3-2b \
       --requests 16 --slots 4 --gap 2.0 --new-tokens 8
@@ -35,7 +46,9 @@ from repro.serve.sim import (FakeClock, Simulator, shared_prefix_requests,
                              staggered_trace)
 from repro.sharding import params as P
 
-RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results" / "serve"
+REPO = pathlib.Path(__file__).resolve().parent.parent
+RESULTS = REPO / "results" / "serve"
+BENCH_JSON = REPO / "BENCH_serve.json"
 
 
 def build_requests(n: int, prompt_len: int, new_tokens: int) -> list[Request]:
@@ -59,13 +72,16 @@ def run_once(cfg, params, args, *, mode: str, sequential: bool = False,
         requests = build_requests(args.requests, args.prompt_len,
                                   args.new_tokens)
     trace = staggered_trace(requests, gap=args.gap)
-    sim = Simulator(eng, trace, clock, sequential=sequential)
+    sim = Simulator(eng, trace, clock, step_time=args.step_time,
+                    dispatch_time=args.dispatch_time, sequential=sequential)
     w0 = time.perf_counter()
     report = sim.run()
     wall = time.perf_counter() - w0
     lat = [r.finish_time - r.arrival_time for r in report.completed]
     return {
         "mode": mode,
+        "backend": eng.stats()["backend"],
+        "async_dispatch": eng.async_dispatch,
         "elapsed_sim": report.elapsed,
         "engine_steps": report.steps,
         "tokens": report.tokens_generated,
@@ -80,31 +96,62 @@ def run_once(cfg, params, args, *, mode: str, sequential: bool = False,
     }, eng
 
 
+def _tokens(eng) -> dict:
+    return {r.id: tuple(r.tokens) for r in eng.completed}
+
+
+def _assert_identical(named_engines) -> None:
+    """The perf claim is only valid if the outputs are the same outputs."""
+    (base_name, base), *rest = named_engines
+    want = _tokens(base)
+    for name, eng in rest:
+        got = _tokens(eng)
+        if got != want:
+            raise AssertionError(
+                f"outputs diverged: {name} != {base_name} — the engines "
+                f"must be bit-identical before throughput is comparable")
+
+
 def _print_mode(mode: dict) -> None:
-    print(f"{mode['mode']:>11}: {mode['tokens']} tokens in "
-          f"{mode['elapsed_sim']:.1f} sim-s "
+    tag = "async" if mode["async_dispatch"] else "sync"
+    print(f"{mode['mode']:>12} [{mode['backend']}/{tag}]: "
+          f"{mode['tokens']} tokens in {mode['elapsed_sim']:.1f} sim-s "
           f"({mode['throughput_tok_per_sim_s']:.3f} tok/sim-s), "
           f"mean latency {mode['mean_latency_sim']:.2f} sim-s, "
           f"wall {mode['wall_s']:.2f}s")
 
 
 def run_default(cfg, params, args) -> tuple[dict, float]:
-    cont, _ = run_once(cfg, params, args, mode="continuous")
-    seq, _ = run_once(cfg, params, args, mode="sequential", sequential=True)
-    speedup = cont["throughput_tok_per_sim_s"] / seq["throughput_tok_per_sim_s"]
+    """New engine (paged + async double-buffered dispatch) vs the PR 2
+    engine (cache lanes, synchronous) vs sequential, same trace."""
+    new, eng_new = run_once(cfg, params, args, mode="async-paged",
+                            async_dispatch=True)
+    pr2, eng_pr2 = run_once(cfg, params, args, mode="pr2-sync", paged=False)
+    seq, eng_seq = run_once(cfg, params, args, mode="sequential",
+                            paged=False, sequential=True)
+    _assert_identical([("pr2-sync", eng_pr2), ("async-paged", eng_new),
+                       ("sequential", eng_seq)])
+    async_speedup = (new["throughput_tok_per_sim_s"]
+                     / pr2["throughput_tok_per_sim_s"])
+    seq_speedup = (new["throughput_tok_per_sim_s"]
+                   / seq["throughput_tok_per_sim_s"])
     out = {"arch": cfg.name, "requests": args.requests, "slots": args.slots,
-           "gap": args.gap, "continuous": cont, "sequential": seq,
-           "sim_speedup": round(speedup, 3)}
+           "gap": args.gap, "dispatch_time": args.dispatch_time,
+           "step_time": args.step_time,
+           "async_paged": new, "pr2_sync": pr2, "sequential": seq,
+           "async_speedup_vs_pr2": round(async_speedup, 3),
+           "speedup_vs_sequential": round(seq_speedup, 3)}
     if not args.json:
-        for mode in (cont, seq):
+        for mode in (new, pr2, seq):
             _print_mode(mode)
-        print(f"continuous batching speedup: {speedup:.2f}x")
-    return out, speedup
+        print(f"async paged dispatch vs PR 2 engine: {async_speedup:.2f}x "
+              f"(vs sequential: {seq_speedup:.2f}x); outputs bit-identical")
+    return out, async_speedup
 
 
 def run_shared_prefix(cfg, params, args) -> tuple[dict, float]:
-    """Same shared-prefix trace through the engine with and without the
-    paged prefix cache; the speedup isolates what page reuse buys."""
+    """Same shared-prefix trace with paged sharing on/off and through the
+    PR 2 sharing engine; the speedups isolate page reuse and async+paged."""
     prefix_len = args.shared_prefix
     make = lambda: shared_prefix_requests(
         args.requests, prefix_len=prefix_len, tail_len=args.tail_len,
@@ -113,26 +160,103 @@ def run_shared_prefix(cfg, params, args) -> tuple[dict, float]:
     max_len = max(args.max_len, need)
     shared, eng = run_once(cfg, params, args, mode="sharing",
                            requests=make(), max_len=max_len,
-                           page_size=args.page_size)
-    plain, _ = run_once(cfg, params, args, mode="no-sharing",
-                        requests=make(), max_len=max_len)
-    speedup = (shared["throughput_tok_per_sim_s"]
-               / plain["throughput_tok_per_sim_s"])
-    pages = eng.stats()["pages"]
+                           page_size=args.page_size, async_dispatch=True)
+    plain, eng_plain = run_once(cfg, params, args, mode="no-sharing",
+                                requests=make(), max_len=max_len,
+                                async_dispatch=True)
+    pr2, eng_pr2 = run_once(cfg, params, args, mode="pr2-sharing",
+                            requests=make(), max_len=max_len,
+                            page_size=args.page_size, paged=False)
+    _assert_identical([("pr2-sharing", eng_pr2), ("sharing", eng),
+                       ("no-sharing", eng_plain)])
+    sharing_speedup = (shared["throughput_tok_per_sim_s"]
+                       / plain["throughput_tok_per_sim_s"])
+    vs_pr2 = (shared["throughput_tok_per_sim_s"]
+              / pr2["throughput_tok_per_sim_s"])
+    stats = eng.stats()
+    pages = stats["pages"]
     out = {"arch": cfg.name, "requests": args.requests, "slots": args.slots,
            "gap": args.gap, "shared_prefix": prefix_len,
            "page_size": args.page_size, "prefill_chunk": args.prefill_chunk,
-           "sharing": shared, "no_sharing": plain, "pages": pages,
-           "sharing_speedup": round(speedup, 3)}
+           "dispatch_time": args.dispatch_time, "step_time": args.step_time,
+           "sharing": shared, "no_sharing": plain, "pr2_sharing": pr2,
+           "pages": pages, "pool": stats.get("pool"),
+           "stalls": stats["stalls"], "rematches": stats["rematches"],
+           "sharing_speedup": round(sharing_speedup, 3),
+           "async_speedup_vs_pr2": round(vs_pr2, 3)}
     if not args.json:
-        for mode in (shared, plain):
+        for mode in (shared, plain, pr2):
             _print_mode(mode)
         print(f"pages: {pages['hits']} hits / {pages['misses']} misses, "
               f"{pages['tokens_reused']} prompt tokens reused, "
-              f"{pages['cow_copies']} CoW copies, "
+              f"{stats['rematches']} mid-flight re-matches, "
+              f"{stats['stalls']} dedup stalls, "
               f"{pages['resident']} resident")
-        print(f"prefix sharing speedup: {speedup:.2f}x")
-    return out, speedup
+        print(f"prefix sharing speedup: {sharing_speedup:.2f}x; "
+              f"vs PR 2 sharing engine: {vs_pr2:.2f}x; outputs bit-identical")
+    return out, vs_pr2
+
+
+def run_kernel_bench(cfg, args) -> tuple[dict, float]:
+    """Microbenchmark the fused paged-attention kernel vs its reference.
+
+    On CPU the Pallas kernel runs in interpret mode, so the wall numbers
+    track functional cost only — the artifact records both so a TPU run
+    slots into the same JSON shape.
+    """
+    import numpy as np
+
+    from repro.kernels.paged_attention import ops
+
+    rng = np.random.default_rng(args.seed)
+    h, kh, d = max(cfg.n_heads, 1), max(cfg.n_kv_heads, 1), cfg.resolved_head_dim
+    b, ps = args.slots, args.page_size
+    np_slot = -(-args.max_len // ps)
+    pool_pages = b * np_slot + 1
+    q = jax.numpy.asarray(rng.normal(size=(b, h, d)), jax.numpy.float32)
+    kp = jax.numpy.asarray(rng.normal(size=(pool_pages, ps, kh, d)),
+                           jax.numpy.float32)
+    vp = jax.numpy.asarray(rng.normal(size=(pool_pages, ps, kh, d)),
+                           jax.numpy.float32)
+    tables = jax.numpy.asarray(
+        rng.permutation(pool_pages - 1)[:b * np_slot].reshape(b, np_slot),
+        jax.numpy.int32)
+    lengths = jax.numpy.asarray(
+        rng.integers(1, args.max_len, size=(b,)), jax.numpy.int32)
+
+    def timed(impl):
+        fn = jax.jit(lambda q, kp, vp: ops.paged_attention(
+            q, kp, vp, tables, lengths, impl=impl))
+        out = fn(q, kp, vp)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(args.kernel_iters):
+            out = fn(q, kp, vp)
+        jax.block_until_ready(out)
+        return out, (time.perf_counter() - t0) / args.kernel_iters
+
+    o_ref, t_ref = timed("ref")
+    o_pal, t_pal = timed("pallas")
+    err = float(jax.numpy.abs(o_ref - o_pal).max())
+    out = {"arch": cfg.name, "slots": b, "heads": h, "kv_heads": kh,
+           "head_dim": d, "page_size": ps, "pool_pages": pool_pages,
+           "iters": args.kernel_iters, "max_abs_err": err,
+           "ref_ms": round(t_ref * 1e3, 3),
+           "pallas_interpret_ms": round(t_pal * 1e3, 3)}
+    if not args.json:
+        print(f"paged_attention ({b} slots, {pool_pages} pages, ps={ps}): "
+              f"ref {out['ref_ms']}ms, pallas(interpret) "
+              f"{out['pallas_interpret_ms']}ms, max |err| {err:.2e}")
+    assert err < 1e-4, f"kernel diverged from reference: {err}"
+    return out, 1.0
+
+
+def _merge_bench_json(key: str, payload: dict) -> None:
+    data = {}
+    if BENCH_JSON.exists():
+        data = json.loads(BENCH_JSON.read_text())
+    data[key] = payload
+    BENCH_JSON.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
 
 
 def main(argv=None):
@@ -149,28 +273,44 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--prefill-chunk", type=int, default=1,
                     help="prompt tokens fed per slot per step")
+    ap.add_argument("--step-time", type=float, default=1.0,
+                    help="sim cost of one batched device step")
+    ap.add_argument("--dispatch-time", type=float, default=1.0,
+                    help="sim cost of host scheduling per step (a sync "
+                         "engine pays it serially; async overlaps it)")
     ap.add_argument("--shared-prefix", type=int, nargs="?", const=64,
                     default=0, metavar="LEN",
                     help="shared-prefix workload: compare the paged prefix "
-                         "cache against the no-sharing engine")
+                         "cache against no-sharing and the PR 2 engine")
     ap.add_argument("--tail-len", type=int, default=4,
                     help="distinct prompt tokens after the shared prefix")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per shared-prefix page")
+    ap.add_argument("--kernel-bench", action="store_true",
+                    help="microbenchmark the paged-attention kernel vs ref")
+    ap.add_argument("--kernel-iters", type=int, default=20)
     ap.add_argument("--json", action="store_true")
+    ap.add_argument("--bench-json", action="store_true",
+                    help="merge this run's report into BENCH_serve.json")
     args = ap.parse_args(argv)
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
-    params = P.init_tree(registry.decls(cfg), jax.random.key(args.seed))
 
-    if args.shared_prefix:
-        out, speedup = run_shared_prefix(cfg, params, args)
-        tag = "__shared_prefix"
+    if args.kernel_bench:
+        out, speedup = run_kernel_bench(cfg, args)
+        tag, key = "__kernel", "kernel"
     else:
-        out, speedup = run_default(cfg, params, args)
-        tag = "__trace"
+        params = P.init_tree(registry.decls(cfg), jax.random.key(args.seed))
+        if args.shared_prefix:
+            out, speedup = run_shared_prefix(cfg, params, args)
+            tag, key = "__shared_prefix", "shared_prefix"
+        else:
+            out, speedup = run_default(cfg, params, args)
+            tag, key = "__trace", "default"
     if args.json:
         print(json.dumps(out, indent=1))
+    if args.bench_json:
+        _merge_bench_json(key, out)
     RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / f"{cfg.name}{tag}.json").write_text(json.dumps(out, indent=1))
     return speedup

@@ -32,7 +32,8 @@ def main():
     clock = FakeClock()
     engine = ContinuousBatchingEngine(cfg, params, slots=4, max_len=64,
                                       platform=platform, clock=clock,
-                                      prefill_chunk=4, page_size=8)
+                                      prefill_chunk=4, page_size=8,
+                                      async_dispatch=True)
 
     # 3. Completion interrupts, exactly like an accelerator's end-of-
     #    computation line: the host handler runs when a request finishes.

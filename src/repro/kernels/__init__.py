@@ -3,7 +3,9 @@
 from repro.kernels.attention import ops as attention_ops
 from repro.kernels.conv1d import ops as conv1d_ops
 from repro.kernels.moe import ops as moe_ops
+from repro.kernels.paged_attention import ops as paged_attention_ops
 from repro.kernels.rglru import ops as rglru_ops
 from repro.kernels.ssd import ops as ssd_ops
 
-__all__ = ["attention_ops", "conv1d_ops", "moe_ops", "rglru_ops", "ssd_ops"]
+__all__ = ["attention_ops", "conv1d_ops", "moe_ops", "paged_attention_ops",
+           "rglru_ops", "ssd_ops"]

@@ -1,0 +1,128 @@
+"""Paged decode attention Pallas TPU kernel (single query, GQA, block table).
+
+The decode-side analogue of the flash kernel in ``kernels/attention``: one
+query per slot attends over that slot's KV, but the KV lives *in place* in a
+global page pool — fixed-size pages of ``page_size`` positions — reached
+through a per-slot block table instead of a contiguous per-slot lane. The
+block table rides in as a scalar-prefetch operand
+(:class:`pltpu.PrefetchScalarGridSpec`), so the page id is known before the
+kernel body runs and each grid step DMA-streams exactly one pool page
+HBM->VMEM; nothing is ever copied into a per-slot contiguous buffer (the
+VWR2A "operate on data where it already sits" discipline).
+
+Grid = (slots, n_pages); the page dimension is innermost and sequential, and
+the running (m, l, acc) online-softmax state is carried across it in VMEM
+scratch, exactly like the flash kernel carries its KV-tile loop.
+
+Layout contract: q (B, H, D); k/v pool (P, page_size, K, D); tables (B, NP)
+int32 page ids; lengths (B,) int32 valid-position counts. GQA is folded
+head-major: head h reads KV head ``h // (H // K)``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, page_size: int, groups: int,
+                  window: int | None, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    n_p = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = lengths_ref[b]
+    q = q_ref[0].astype(jnp.float32)               # (H, D)
+    k = k_ref[0].astype(jnp.float32)               # (ps, K, D)
+    v = v_ref[0].astype(jnp.float32)
+    h, d = q.shape
+    kh = k.shape[1]
+
+    # GQA head-major fold: (H, D) -> (K, G, D); batch the KV-head axis
+    qf = q.reshape(kh, groups, d)
+    s = lax.dot_general(qf, k, (((2,), (2,)), ((0,), (1,))),
+                        preferred_element_type=jnp.float32) * scale  # (K,G,ps)
+    s = s.reshape(h, page_size)
+
+    kpos = j * page_size + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < kv_len
+    if window is not None:
+        mask &= kpos >= kv_len - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                            # (H, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1, keepdims=True)
+    pf = p.reshape(kh, groups, page_size)
+    pv = lax.dot_general(pf, v, (((2,), (0,)), ((0,), (1,))),
+                         preferred_element_type=jnp.float32)  # (K, G, D)
+    acc_scr[...] = acc_scr[...] * corr + pv.reshape(h, d)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_p - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q, k_pool, v_pool, tables, lengths, *,
+                           window: int | None = None,
+                           scale: float | None = None,
+                           interpret: bool = True) -> jax.Array:
+    """Fused paged single-query attention (see module docstring for layout).
+
+    Returns o (B, H, D). ``scale`` defaults to ``1/sqrt(D)`` — pass the
+    unpadded head dim's scale explicitly when D is padded for the MXU.
+    """
+    b, h, d = q.shape
+    n_pages, ps, kh, dk = k_pool.shape
+    assert dk == d, (dk, d)
+    assert h % kh == 0, (h, kh)
+    groups = h // kh
+    np_per_slot = tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_paged_kernel, page_size=ps, groups=groups,
+                               window=window, scale=scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, np_per_slot),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda bi, j, t, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, ps, kh, d),
+                         lambda bi, j, t, ln: (t[bi, j], 0, 0, 0)),
+            pl.BlockSpec((1, ps, kh, d),
+                         lambda bi, j, t, ln: (t[bi, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda bi, j, t, ln: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, d), jnp.float32),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool)

@@ -1,0 +1,92 @@
+"""Dispatch + XAIF registration for the paged decode attention kernel.
+
+``paged_decode_append`` is the engine-facing fused op: scatter the step's
+new K/V entry into each slot's tail page (an in-place update on the donated
+pool buffers), then run single-query attention *directly against the page
+pool* through the block table. Two backends:
+
+* ``impl="ref"`` — the pure-jax oracle (``ref.py``). Its gather + masked
+  attention is arranged to be bit-identical to the PR 2 lane-cache decode,
+  so it is also the engine's default: paged serving changes memory layout,
+  never tokens.
+* ``impl="pallas"`` — the fused TPU kernel (``kernel.py``): block-table
+  scalar prefetch, one pool page streamed per grid step, online softmax in
+  VMEM scratch. On a real TPU the append scatter fuses into the same
+  program via ``input_output_aliases``; in this CPU repro the scatter is an
+  XLA in-place update on the donated pool and the kernel runs in interpret
+  mode.
+
+The XAIF contract mirrors the paper's CGRA plug-in: master read ports for
+the query and the two pool planes plus the block table, one master write
+port for O, slave ports = the static page-size/window configuration.
+"""
+
+from __future__ import annotations
+
+from repro.core.power import PowerDomain
+from repro.core.xaif import AcceleratorSpec, PortSpec, register
+from repro.kernels.paged_attention import ref
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+from repro.sharding import axes as lx
+from repro.sharding.params import Axes
+
+
+def paged_attention(q, k_pool, v_pool, tables, lengths, *,
+                    window: int | None = None, impl: str = "ref",
+                    interpret: bool = True):
+    """Single-query paged attention over a (P, ps, K, D) page pool.
+
+    q (B, H, D); tables (B, NP) int32 page ids; lengths (B,) valid counts.
+    """
+    if impl == "pallas":
+        return paged_attention_kernel(q, k_pool, v_pool, tables, lengths,
+                                      window=window, interpret=interpret)
+    if impl == "ref":
+        return ref.paged_attention(q, k_pool, v_pool, tables, lengths,
+                                   window=window)
+    raise ValueError(f"unknown paged_attention impl {impl!r}")
+
+
+def paged_decode_append(q, k_new, v_new, k_pool, v_pool, tables, lengths, *,
+                        append_mask=None, window: int | None = None,
+                        impl: str = "ref", interpret: bool = True):
+    """Fused decode step: append the new KV entry, attend over it in place.
+
+    Appends ``k_new[b]``/``v_new[b]`` at position ``lengths[b]`` of slot
+    ``b``'s page chain (``append_mask`` False drops the append — the lane is
+    riding the batch idle and its output is ignored), then attends over
+    ``lengths[b] + 1`` positions. Returns ``(o, k_pool', v_pool')`` — pass
+    donated pools so XLA updates them in place.
+    """
+    if impl == "ref":
+        return ref.paged_decode_append(q, k_new, v_new, k_pool, v_pool,
+                                       tables, lengths,
+                                       append_mask=append_mask, window=window)
+    k_pool, v_pool = ref.append_to_tail_pages(k_new, v_new, k_pool, v_pool,
+                                              tables, lengths, append_mask)
+    o = paged_attention(q, k_pool, v_pool, tables, lengths + 1,
+                        window=window, impl=impl, interpret=interpret)
+    return o, k_pool, v_pool
+
+
+SPEC = AcceleratorSpec(
+    name="paged_attention_pallas",
+    op="paged_attention",
+    impl="pallas",
+    fn=paged_attention_kernel,
+    slave_ports=(
+        PortSpec("paged_config", Axes(), direction="slave", dtype="int32"),
+    ),
+    master_ports=(
+        PortSpec("q", Axes(lx.DECODE_BATCH, lx.HEADS, lx.HEAD_DIM)),
+        PortSpec("k_pool", Axes(None, lx.CACHE_SEQ, lx.KV_HEADS, lx.HEAD_DIM)),
+        PortSpec("v_pool", Axes(None, lx.CACHE_SEQ, lx.KV_HEADS, lx.HEAD_DIM)),
+        PortSpec("block_table", Axes(lx.DECODE_BATCH, None), dtype="int32"),
+        PortSpec("o", Axes(lx.DECODE_BATCH, lx.HEADS, lx.HEAD_DIM)),
+    ),
+    power_domain=PowerDomain("acc_paged_attention", leak_uw=10.0,
+                             active_dyn_uw_mhz=42.0),
+    description=("Paged decode attention: block-table scalar prefetch, one "
+                 "pool page per grid step, online softmax in VMEM scratch"),
+)
+register(SPEC, allow_override=True)

@@ -1,0 +1,88 @@
+"""Pure-jax oracle for the paged decode attention kernel.
+
+Semantics (shared with the Pallas kernel in ``kernel.py``): each slot ``b``
+holds one single-token query and a *block table* — a row of page ids into a
+global KV page pool. The op gathers the slot's pages, masks positions at or
+beyond ``lengths[b]``, and computes grouped-query attention. The reference
+deliberately reconstructs the slot's KV exactly as the lane-cache engine
+lays it out (page ``j`` occupies positions ``[j*ps, (j+1)*ps)``) and then
+runs the very same :func:`repro.models.layers.attention_chunked` the lane
+decode path uses — so the paged engine's decode is *bit-identical* to the
+PR 2 per-lane cache, not merely allclose.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention_chunked, attention_ref
+
+
+def paged_attention(q, k_pool, v_pool, tables, lengths, *,
+                    window: int | None = None) -> jax.Array:
+    """Single-query paged attention, pure-jax reference.
+
+    q: (B, H, D) — one post-rope query per slot.
+    k_pool/v_pool: (P, ps, K, D) — the global page pool (one layer).
+    tables: (B, NP) int32 — page ids per slot; unused entries must point at
+        pages whose positions fall at or beyond ``lengths[b]`` (they are
+        masked, so their contents are never observable).
+    lengths: (B,) int32 — valid KV entries per slot; attention covers
+        positions ``[0, lengths[b])``.
+    window: optional sliding window — only the last ``window`` positions
+        attend (the query sits at position ``lengths[b] - 1``). The
+        windowed path goes through the naive oracle (the per-slot query
+        offset is data-dependent, which the chunked custom-vjp backend
+        cannot take); the global path reuses ``attention_chunked`` so it is
+        bit-identical to the lane-cache decode.
+    """
+    _, ps, kh, d = k_pool.shape
+
+    def one(qb, tb, lb):
+        kg = k_pool[tb].reshape(1, -1, kh, d)
+        vg = v_pool[tb].reshape(1, -1, kh, d)
+        if window is not None:
+            return attention_ref(qb[None, None], kg, vg, causal=False,
+                                 window=window, q_offset=lb - 1,
+                                 kv_len=lb)[0, 0]
+        return attention_chunked(qb[None, None], kg, vg, causal=False,
+                                 kv_len=lb)[0, 0]
+
+    return jax.vmap(one)(q, tables, lengths)
+
+
+def append_to_tail_pages(k_new, v_new, k_pool, v_pool, tables, lengths,
+                         append_mask=None):
+    """Scatter each slot's new KV entry into its tail page, in place.
+
+    The entry lands at page ``tables[b, lengths[b] // ps]``, row
+    ``lengths[b] % ps``. ``append_mask`` (B,) bool drops masked lanes'
+    writes by pointing them at the out-of-range page index (``mode="drop"``
+    — the pool is untouched bitwise). Shared by the ref and pallas
+    dispatch paths so the append semantics cannot diverge between them.
+    """
+    n_pages, ps = k_pool.shape[0], k_pool.shape[1]
+    b = k_new.shape[0]
+    page = tables[jnp.arange(b), lengths // ps]
+    off = lengths % ps
+    if append_mask is not None:
+        page = jnp.where(append_mask, page, n_pages)
+    k_pool = k_pool.at[page, off].set(k_new.astype(k_pool.dtype), mode="drop")
+    v_pool = v_pool.at[page, off].set(v_new.astype(v_pool.dtype), mode="drop")
+    return k_pool, v_pool
+
+
+def paged_decode_append(q, k_new, v_new, k_pool, v_pool, tables, lengths, *,
+                        append_mask=None, window: int | None = None):
+    """Reference for the fused decode step: append, then attend.
+
+    Writes ``k_new[b]``/``v_new[b]`` into slot ``b``'s tail page at position
+    ``lengths[b]``, then attends over ``lengths[b] + 1`` entries. Masked
+    lanes append nothing and their output is garbage (must be ignored).
+    Returns ``(o, k_pool', v_pool')``.
+    """
+    k_pool, v_pool = append_to_tail_pages(k_new, v_new, k_pool, v_pool,
+                                          tables, lengths, append_mask)
+    o = paged_attention(q, k_pool, v_pool, tables, lengths + 1, window=window)
+    return o, k_pool, v_pool

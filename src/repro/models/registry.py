@@ -40,6 +40,34 @@ def decode_step(params, cfg: ModelConfig, cache, tokens):
     return _mod(cfg).decode_step(params, cfg, cache, tokens)
 
 
+def supports_paged(cfg: ModelConfig) -> bool:
+    """True when the family can decode against a global KV page pool
+    (transformer-family KV caches only; see transformer.supports_paged)."""
+    if cfg.family not in _TRANSFORMER_FAMILIES:
+        return False
+    return transformer.supports_paged(cfg)
+
+
+def _require_paged(cfg: ModelConfig) -> None:
+    # fail loudly, like the rest of the registry: a transformer-shaped KV
+    # pool built from an SSM/Griffin config would be silently wrong
+    if not supports_paged(cfg):
+        raise ValueError(f"{cfg.name} ({cfg.family}) has no paged KV decode")
+
+
+def paged_pool_init(cfg: ModelConfig, n_pages: int, page_size: int):
+    _require_paged(cfg)
+    return transformer.paged_pool_init(cfg, n_pages, page_size)
+
+
+def decode_step_paged(params, cfg: ModelConfig, pool_k, pool_v, tables,
+                      lengths, tokens, append_mask=None, impl=None):
+    _require_paged(cfg)
+    return transformer.decode_step_paged(params, cfg, pool_k, pool_v, tables,
+                                         lengths, tokens,
+                                         append_mask=append_mask, impl=impl)
+
+
 def cache_abstract(cfg: ModelConfig, batch: int, max_len: int):
     if cfg.family in _TRANSFORMER_FAMILIES:
         return transformer.KVCache.abstract(cfg, batch, max_len)

@@ -271,6 +271,83 @@ def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, max_len: int | N
     return logits, cache
 
 
+def supports_paged(cfg: ModelConfig) -> bool:
+    """True when this config can decode against a global KV page pool.
+
+    Excluded: MoE (capacity routing mixes tokens across batch rows, so a
+    batched paged step would not be bit-independent per slot the way the
+    vmapped lane step is) and sliding-window configs (the lane cache's ring
+    layout is the memory-efficient representation there).
+    """
+    return cfg.moe_experts < 2 and not cfg.sliding_window
+
+
+def paged_pool_init(cfg: ModelConfig, n_pages: int, page_size: int,
+                    dtype=jnp.bfloat16):
+    """Zeroed global KV page pool: a (k, v) pair of (L, P, ps, Kh, Dh).
+
+    ``n_pages`` includes any null/sentinel pages the caller reserves; the
+    pool carries no per-slot structure — block tables impose it per step.
+    """
+    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads,
+             cfg.resolved_head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def decode_step_paged(params, cfg: ModelConfig, pool_k, pool_v, tables,
+                      lengths, tokens, append_mask=None, impl: str | None = None):
+    """One serving step against the global page pool (no per-slot lanes).
+
+    tokens (B,) int32; lengths (B,) int32 — positions already resident per
+    slot (the new entry lands at ``lengths[b]``); tables (B, NP) int32 page
+    ids; pool_k/pool_v (L, P, ps, Kh, Dh). ``append_mask`` (B,) bool gates
+    the KV append per slot (False = the lane is idle/stalled and rides the
+    batch; its logits are garbage and must be ignored). Returns
+    ``(logits (B, V), pool_k', pool_v')`` — pools should be donated.
+
+    Every per-slot quantity (rope position, KV length, page chain) is a
+    batched vector, so one launch serves ragged slots; the attention itself
+    is the fused paged kernel (``repro.kernels.paged_attention``), reading
+    K/V in place from the pool through the block table.
+    """
+    from repro.kernels.paged_attention import ops as paged_ops
+
+    if impl is None:
+        impl = "pallas" if cfg.attn_impl == "pallas" else "ref"
+    positions = lengths[:, None]
+    x = _embed(params, cfg, tokens[:, None], None, positions)
+    il = cfg.moe_interleave if cfg.moe_experts >= 2 else 1
+    n_super = cfg.n_layers // il
+    pk = pool_k.reshape(n_super, il, *pool_k.shape[1:])
+    pv = pool_v.reshape(n_super, il, *pool_v.shape[1:])
+
+    def block(carry, blk_and_pool):
+        x, aux = carry
+        blk, pk_b, pv_b = blk_and_pool
+        pk_o, pv_o = [], []
+        for j in range(il):
+            lp = blk[f"l{j}"]
+            ap = jax.tree.map(lambda a: a.astype(x.dtype), lp["attn"])
+            h = L.rmsnorm(x, ap["ln"], cfg.norm_eps)
+            q, k, v = _project_qkv(h, ap, cfg, positions)
+            o, pk_j, pv_j = paged_ops.paged_decode_append(
+                q[:, 0], k[:, 0], v[:, 0], pk_b[j], pv_b[j], tables, lengths,
+                append_mask=append_mask, impl=impl)
+            x = x + jnp.einsum("bshk,hkd->bsd", o[:, None],
+                               ap["wo"].astype(o.dtype))
+            x, a = _ffn(x, lp, cfg, _is_moe_layer(cfg, j))
+            aux = aux + a
+            pk_o.append(pk_j)
+            pv_o.append(pv_j)
+        return (x, aux), (jnp.stack(pk_o), jnp.stack(pv_o))
+
+    (x, _aux), (pk_new, pv_new) = lax.scan(
+        block, (x, jnp.zeros((), jnp.float32)), (params["blocks"], pk, pv))
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = _head(params, cfg, x)[:, 0]
+    return (logits, pk_new.reshape(pool_k.shape), pv_new.reshape(pool_v.shape))
+
+
 def decode_step(params, cfg: ModelConfig, cache: KVCache, tokens):
     """One serving step: tokens (B,1) int32 -> (logits (B,V), cache')."""
     b = tokens.shape[0]

@@ -198,6 +198,7 @@ class SlotRecord:
     completed: bool = False
     prefix_reused: int = 0         # prompt tokens pre-consumed at admission
     page_keys: tuple = ()          # page-table chain pinned at admission
+    rematched: int = 0             # prompt tokens adopted mid-flight (re-match)
 
 
 class RequestJournal:
@@ -245,6 +246,15 @@ class RequestJournal:
         rec = self._records[request_id]
         rec.prefix_reused = int(tokens_reused)
         rec.page_keys = tuple(tuple(k) for k in page_keys)
+        rec.rematched = 0              # fresh admission restarts the count
+
+    def note_rematch(self, request_id: str, tokens_adopted: int) -> None:
+        """Journal a mid-flight prefix re-match: at a page boundary during
+        chunked prefill the slot adopted a sibling's freshly published pages
+        instead of recomputing them. Like ``note_prefix``, this is an audit
+        field — adoption is an optimisation only and must never change the
+        emitted tokens (``record_token`` enforces that on replay)."""
+        self._records[request_id].rematched += int(tokens_adopted)
 
     def record_token(self, request_id: str, token: int) -> None:
         rec = self._records[request_id]

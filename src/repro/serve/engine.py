@@ -1,11 +1,12 @@
 """Serving: sharded prefill/decode steps and a continuous-batching engine.
 
-The decode step donates the cache (in-place HBM update — the IMC-style
-"computation mode" on resident state). Completion of a request is signaled
-through the XAIF interrupt analogue (:class:`repro.core.xaif.
-InterruptController`), mirroring the paper's accelerator end-of-computation
-interrupt, and the finished slot's memory-bank power domains are clock-gated
-through the platform :class:`~repro.core.power.PowerManager`.
+The decode step runs against donated device state (in-place HBM update —
+the IMC-style "computation mode" on resident state). Completion of a
+request is signaled through the XAIF interrupt analogue
+(:class:`repro.core.xaif.InterruptController`), mirroring the paper's
+accelerator end-of-computation interrupt, and the finished slot's
+memory-bank power domains are clock-gated through the platform
+:class:`~repro.core.power.PowerManager`.
 
 Two layers live here:
 
@@ -14,25 +15,44 @@ Two layers live here:
 * :class:`ContinuousBatchingEngine` — a request-level serving loop: FIFO
   admission queue with backpressure, slot-based batching where new requests
   are prefilled into free decode slots *without stopping in-flight decodes*
-  (prefill is chunk-granular: up to ``prefill_chunk`` prompt tokens per slot
-  per step, so a prefilling slot and a decoding slot ride the same batched
-  step), a per-slot lane cache (donated in-place) under an optional
-  :class:`repro.serve.pages.PageTable` that shares prompt-prefix pages
-  across requests, and preemption-safe replay through
+  (prefill is chunk-granular), and preemption-safe replay through
   :class:`repro.runtime.ft.RequestJournal`.
+
+Two device backends serve the slots:
+
+* **paged** (default for transformer-family configs) — one global KV page
+  pool plus per-slot block tables (:mod:`repro.serve.paged`), decoded by the
+  fused paged-attention kernel (:mod:`repro.kernels.paged_attention`).
+  Prefix sharing is block-table pointing: adopting a resident chain pins
+  page ids (no copy-on-write lane materialisation), publishing a completed
+  page is a refcount bump (no device gather), and two cold same-prefix
+  prefills dedup — the later one stalls on the earlier one's claim, then
+  adopts its published pages (mid-flight re-match).
+* **lanes** (SSM/hybrid/MoE/sliding-window configs, and engines sharing an
+  external page table) — the PR 2 layout: one full-length cache lane per
+  slot (``vmap`` over batch-1 decode), snapshot pages, copy-on-write at the
+  slot's first step.
+
+Dispatch is optionally **async double-buffered** (``async_dispatch=True``):
+step N+1 launches before step N's argmax is transferred — decoding lanes
+take their input token straight from the previous step's on-device argmax
+(the ``feedback`` path), and host bookkeeping for step N (token journaling,
+completion interrupts) retires while the device chews on step N+1. Greedy
+decode makes the overlap invisible in the outputs: tokens are bit-identical
+with async on or off.
 
 Engine invariants (the test suite holds the engine to these):
 
 * **FIFO admission** — requests are admitted to slots, and complete among
   equal-length requests, strictly in arrival order; preemption re-queues
   in-flight work at the front in the same order.
-* **Refcounts never negative** — every ``bank_acquire``/``page acquire``
-  is released exactly once (on completion, eviction, or preemption);
+* **Refcounts never negative** — every ``bank_acquire``/page retain is
+  released exactly once (on completion, eviction, or preemption);
   over-release raises instead of corrupting shared state.
 * **Replay determinism** — decode is greedy, so replay after ``preempt()``
   reproduces every request's tokens bit-for-bit, with or without prefix
-  sharing and chunked prefill; the journal cross-checks each replayed
-  token and fails loudly on divergence.
+  sharing, chunked prefill, paged decode, and async dispatch; the journal
+  cross-checks each replayed token and fails loudly on divergence.
 """
 
 from __future__ import annotations
@@ -49,6 +69,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.runtime.ft import RequestJournal
+from repro.serve.paged import PagePool, paged_chunk_fn, paged_step_fn
 from repro.serve.pages import PageTable
 from repro.sharding import axes as lx_
 from repro.sharding import params as P
@@ -157,11 +178,12 @@ def _slot_step_fn(cfg: ModelConfig):
     # ModelConfig is a frozen (hashable) dataclass; an unhashable config
     # must fail loudly here rather than risk a wrong-model cache collision
     if cfg not in _STEP_FNS:
-        def one(params, cache, tok):
+        def one(params, cache, tok, fb, prev):
+            tok = jnp.where(fb, jnp.full_like(tok, prev), tok)
             logits, cache = registry.decode_step(params, cfg, cache, tok)
             return jnp.argmax(logits, -1)[0].astype(jnp.int32), cache
 
-        vstep = jax.vmap(one, in_axes=(None, 0, 0))
+        vstep = jax.vmap(one, in_axes=(None, 0, 0, 0, 0))
         _STEP_FNS[cfg] = jax.jit(vstep, donate_argnums=(1,))
     return _STEP_FNS[cfg]
 
@@ -178,9 +200,10 @@ def _chunk_step_fn(cfg: ModelConfig, chunk: int):
     """
     key = (cfg, chunk)
     if key not in _CHUNK_FNS:
-        def one(params, cache, toks, count):
+        def one(params, cache, toks, count, fb, prev):
             def body(cache, xs):
                 j, tok = xs
+                tok = jnp.where((j == 0) & fb, jnp.full_like(tok, prev), tok)
                 logits, new_cache = registry.decode_step(params, cfg, cache, tok)
                 out = jnp.argmax(logits, -1)[0].astype(jnp.int32)
                 keep = j < count
@@ -194,7 +217,7 @@ def _chunk_step_fn(cfg: ModelConfig, chunk: int):
                 outs, jnp.maximum(count - 1, 0), 0, keepdims=False)
             return last, cache
 
-        vstep = jax.vmap(one, in_axes=(None, 0, 0, 0))
+        vstep = jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0))
         _CHUNK_FNS[key] = jax.jit(vstep, donate_argnums=(1,))
     return _CHUNK_FNS[key]
 
@@ -236,7 +259,8 @@ class Request:
 
 @dataclasses.dataclass
 class _Slot:
-    """Host-side state of one decode slot (device state lives in the cache)."""
+    """Host-side state of one decode slot (device state lives in the cache
+    lane or, for the paged backend, in the slot's block-table pages)."""
 
     request: Request
     seq: int                 # FIFO sequence number of the request
@@ -244,23 +268,32 @@ class _Slot:
     produced: int = 0        # generated tokens so far
     next_token: int = 0      # token to feed at the next engine step
     page_keys: tuple = ()    # pinned shared-prefix pages (released on evict)
-    pending_snapshot: Any = None   # shared state to copy-on-write at 1st step
+    pending_snapshot: Any = None   # lane backend: shared state to CoW at 1st step
+    block_pages: list = dataclasses.field(default_factory=list)  # paged backend
+    claims: list = dataclasses.field(default_factory=list)  # dedup claims held
 
     @property
     def prefilling(self) -> bool:
         return self.fed < len(self.request.prompt)
 
 
-class ContinuousBatchingEngine:
-    """Slot-based continuous batching over a per-slot paged cache.
+@dataclasses.dataclass
+class _StepMeta:
+    """Host bookkeeping deferred to a step's retire (async dispatch)."""
 
-    Each of the ``slots`` decode lanes holds one request's cache page —
-    built as ``vmap`` over the batch-1 decode step, so every slot carries
-    its *own* position counter and its lane is bit-independent of the other
-    lanes' contents. One :meth:`step` advances every occupied lane by one
-    token: lanes still consuming their prompt are teacher-forced (token-
-    granular prefill), lanes past it decode greedily. New requests are
-    admitted into free lanes between steps; in-flight lanes never stop.
+    emitted: list            # (lane, slot): token value lands at retire
+    finished: list           # slots completing in this step, lane order
+
+
+class ContinuousBatchingEngine:
+    """Slot-based continuous batching over paged or per-lane device caches.
+
+    Each of the ``slots`` decode lanes holds one request. One :meth:`step`
+    advances every occupied lane: lanes still consuming their prompt are
+    teacher-forced (up to ``prefill_chunk`` tokens), lanes past it decode
+    greedily. New requests are admitted into free lanes between steps;
+    in-flight lanes never stop. See the module docstring for the paged vs
+    lane backends and async double-buffered dispatch.
 
     The engine is deliberately clock-agnostic: pass ``clock`` (any
     ``() -> float``) and drive :meth:`step` from a scheduler or from the
@@ -274,7 +307,11 @@ class ContinuousBatchingEngine:
                  pad_token: int = 0, prefill_chunk: int = 1,
                  page_size: int | None = None,
                  page_table: PageTable | None = None,
-                 page_capacity: int | None = None):
+                 page_capacity: int | None = None,
+                 paged: bool | None = None,
+                 async_dispatch: bool = False,
+                 lane_batch: int | None = None,
+                 device_len: int | None = None):
         from repro.core.platform import Platform, XHeepConfig
 
         if slots < 1:
@@ -294,11 +331,38 @@ class ContinuousBatchingEngine:
         self.journal = journal or RequestJournal()
         self.pad_token = pad_token
         self.prefill_chunk = prefill_chunk
+        self.async_dispatch = async_dispatch
+        # device-shape canonicalisation: lanes/cache positions may be padded
+        # beyond the scheduling shape so engines of different sizes share one
+        # compiled step (extra lanes ride idle; extra positions are masked)
+        self.n_lanes = max(slots, lane_batch or 0)
+        self.device_len = max(max_len, device_len or 0)
+
+        # backend: a global page pool needs family support and an
+        # engine-private table (an external shared table holds snapshot
+        # payloads from other engines — lane territory)
+        can_page = registry.supports_paged(cfg) and page_table is None
+        if paged is None:
+            paged = can_page
+        elif paged and not can_page:
+            raise ValueError(
+                "paged backend needs a transformer-family config without "
+                "MoE/sliding-window and an engine-private page table")
+        self.paged = paged
+
         # pass `page_table` to share one prefix store across engines (same
         # cfg/max_len), or just `page_size` for an engine-private table.
-        # The private table is always bounded (every resident page retains a
-        # full max_len cache snapshot); build a PageTable(capacity_pages=
-        # None) yourself if you really want unbounded residency.
+        # The private table is always bounded; build a
+        # PageTable(capacity_pages=None) yourself if you really want
+        # unbounded residency.
+        self._ps = page_size or 16
+        self._np_max = -(-self.device_len // self._ps)
+        cap = 0
+        self._pool: PagePool | None = None
+        if self.paged:
+            if page_size:
+                cap = page_capacity if page_capacity is not None else 16 * slots
+            self._pool = PagePool(cfg, slots * self._np_max + cap, self._ps)
         if page_table is not None:
             self.pages: PageTable | None = page_table
         elif page_size:
@@ -306,7 +370,8 @@ class ContinuousBatchingEngine:
                 page_size,
                 capacity_pages=(page_capacity if page_capacity is not None
                                 else 16 * slots),
-                platform=self.platform)
+                platform=self.platform,
+                on_evict=(self._pool.release if self.paged else None))
         else:
             self.pages = None
 
@@ -315,21 +380,34 @@ class ContinuousBatchingEngine:
         self.slots: list[_Slot | None] = [None] * slots
         self._dirty: set[int] = set()          # lanes holding a dead cache page
         self._seq = 0
+        self._claims: dict[tuple, _Slot] = {}  # page key -> computing slot
+        self._pending: tuple[_StepMeta, Any] | None = None  # unretired step
+        self._prev_nxt = None                  # device argmax of pending step
 
         # throughput counters — monotone by construction
         self.steps = 0
         self.tokens_generated = 0
         self.prompt_tokens_processed = 0
         self.prompt_tokens_reused = 0
+        self.stalls = 0                        # lane-steps waiting on a sibling
+        self.rematches = 0                     # mid-flight prefix adoptions
+        self.rematched_tokens = 0              # prompt tokens adopted mid-flight
         self.completed: list[Request] = []
         self.rejected = 0
 
-        self._step_fn = _slot_step_fn(cfg)
-        self._chunk_fn = (_chunk_step_fn(cfg, prefill_chunk)
-                          if prefill_chunk > 1 else None)
-        self._reset_fn = _slot_reset_fn()
-        self._page_template = registry.cache_init(cfg, 1, max_len)
-        self._cache = self._init_cache()
+        if self.paged:
+            self._pstep = paged_step_fn(cfg)
+            self._pchunk = (paged_chunk_fn(cfg, prefill_chunk)
+                            if prefill_chunk > 1 else None)
+            self._cache = None
+        else:
+            self._step_fn = _slot_step_fn(cfg)
+            self._chunk_fn = (_chunk_step_fn(cfg, prefill_chunk)
+                              if prefill_chunk > 1 else None)
+            self._reset_fn = _slot_reset_fn()
+            self._page_template = registry.cache_init(cfg, 1, self.device_len)
+            self._cache = self._init_cache()
+        self._zero_prev = jnp.zeros((self.n_lanes,), jnp.int32)
 
         n_banks = self.platform.config.n_banks
         self._slot_bank = [f"bank{i % n_banks}" for i in range(slots)]
@@ -344,10 +422,10 @@ class ContinuousBatchingEngine:
     # -- device-state plumbing ----------------------------------------------
 
     def _init_cache(self):
-        # one page per slot, each an exact copy of the family's batch-1
-        # initial cache (not assumed to be zeros)
+        # one lane per device slot, each an exact copy of the family's
+        # batch-1 initial cache (not assumed to be zeros)
         return jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (self.n_slots,) + x.shape),
+            lambda x: jnp.broadcast_to(x, (self.n_lanes,) + x.shape),
             self._page_template)
 
     # -- admission -----------------------------------------------------------
@@ -383,7 +461,7 @@ class ContinuousBatchingEngine:
             req = self.queue.popleft()              # FIFO — fairness invariant
             match = (self.pages.acquire(req.prompt)
                      if self.pages is not None else None)
-            if match is None and i in self._dirty:
+            if not self.paged and match is None and i in self._dirty:
                 self._cache = self._reset_fn(self._cache, i,
                                              self._page_template)
                 self._dirty.discard(i)
@@ -392,13 +470,19 @@ class ContinuousBatchingEngine:
             req.admit_time = self.clock()
             slot = _Slot(request=req, seq=rec.arrival_seq)
             if match is not None:
-                # shared prefix admitted pre-consumed: no reset needed (the
-                # snapshot overwrites the whole lane), and the lane copy is
-                # deferred to the first step — copy-on-write, so a slot
-                # preempted before it runs never pays for the copy
+                # shared prefix admitted pre-consumed. Paged backend: pure
+                # block-table pointing — the chain's pool pages are pinned
+                # in place, no state is copied, ever. Lane backend: the lane
+                # copy is deferred to the first step (copy-on-write), so a
+                # slot preempted before it runs never pays for the copy.
                 slot.fed = match.tokens_matched
                 slot.page_keys = match.keys
-                slot.pending_snapshot = match.snapshot
+                if self.paged:
+                    for idx in match.chain:
+                        self._pool.retain(idx)
+                    slot.block_pages = list(match.chain)
+                else:
+                    slot.pending_snapshot = match.snapshot
                 self.prompt_tokens_reused += match.tokens_matched
             slot.next_token = req.prompt[slot.fed]
             self.journal.note_prefix(req.id, slot.fed, slot.page_keys)
@@ -415,7 +499,8 @@ class ContinuousBatchingEngine:
 
     @property
     def busy(self) -> bool:
-        return self.active > 0 or bool(self.queue)
+        return (self.active > 0 or bool(self.queue)
+                or self._pending is not None)
 
     def step(self) -> bool:
         """Admit, then advance every occupied lane one scheduling step.
@@ -423,70 +508,241 @@ class ContinuousBatchingEngine:
         A decoding lane consumes exactly one token per step; a prefilling
         lane consumes up to ``prefill_chunk`` prompt tokens (clamped to the
         next page boundary when prefix sharing is on, so every lane state
-        that completes a page is publishable). Returns False when idle.
+        that completes a page is publishable), or zero while it waits on a
+        sibling computing the same page (dedup stall). With async dispatch
+        the launch happens before the *previous* step's host bookkeeping,
+        so the device never idles on the host. Returns False when idle.
         """
         self._admit()
         if self.active == 0:
+            if self._pending is not None:
+                self._retire(self._pending)        # drain the in-flight step
+                self._pending = None
+                self._prev_nxt = None
+                return True
             return False
-        self._apply_pending_snapshots()
+        meta, nxt = self._dispatch()
+        self.steps += 1
+        if self.async_dispatch:
+            prev, self._pending = self._pending, (meta, nxt)
+            self._prev_nxt = nxt
+            if prev is not None:
+                self._retire(prev)   # host catches up while the device runs
+        else:
+            self._retire((meta, nxt))
+        return True
+
+    def _dispatch(self) -> tuple[_StepMeta, Any]:
+        """Build this step's batch, launch it, and do all host bookkeeping
+        that does not need the step's token values (those retire later)."""
         chunk = self.prefill_chunk
-        toks = np.full((self.n_slots, chunk, 1, 1), self.pad_token, np.int32)
-        counts = np.zeros((self.n_slots,), np.int32)
+        n = self.n_lanes
+        toks = np.full((n, chunk), self.pad_token, np.int32)
+        counts = np.zeros((n,), np.int32)
+        feedback = np.zeros((n,), bool)
+        pending_emit = ({i: s for i, s in self._pending[0].emitted}
+                        if self._pending is not None else {})
+
         for i, slot in enumerate(self.slots):
             if slot is None:
                 continue
             if slot.prefilling:
+                if self.paged and self.pages is not None:
+                    self._try_rematch(slot)
                 prompt = slot.request.prompt
-                n = min(chunk, len(prompt) - slot.fed)
+                m = min(chunk, len(prompt) - slot.fed)
                 if self.pages is not None:
-                    n = min(n, self.pages.page_size
+                    m = min(m, self.pages.page_size
                             - slot.fed % self.pages.page_size)
-                for j in range(n):
-                    toks[i, j, 0, 0] = prompt[slot.fed + j]
+                if (self.paged and self.pages is not None
+                        and self._stalled(slot)):
+                    self.stalls += 1
+                    continue               # counts[i] stays 0: wait, adopt
+                toks[i, :m] = prompt[slot.fed:slot.fed + m]
+                counts[i] = m
             else:
-                n = 1
-                toks[i, 0, 0, 0] = slot.next_token
-            counts[i] = n
-        # empty lanes still ride the batched step (pad token): their pages are
-        # garbage afterwards and must be reset before the next admission
+                counts[i] = 1
+                if self.async_dispatch and pending_emit.get(i) is slot:
+                    feedback[i] = True     # token rides on-device from step N
+                else:
+                    toks[i, 0] = slot.next_token
+            if self.paged and counts[i]:
+                self._ensure_pages(slot, slot.fed + int(counts[i]))
+
+        nxt = self._launch(toks, counts, feedback)
+        meta = _StepMeta([], [])
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            c = int(counts[i])
+            was_prefilling = slot.prefilling
+            if was_prefilling and c == 0:
+                continue                   # stalled this step
+            slot.fed += c
+            if was_prefilling:
+                self.prompt_tokens_processed += c
+                self._maybe_publish(i, slot)
+                if slot.prefilling:
+                    # still consuming the prompt: teacher-force the next token
+                    slot.next_token = slot.request.prompt[slot.fed]
+                    continue
+                self._drop_claims(slot)    # prefill done; nothing left to claim
+            meta.emitted.append((i, slot))
+            slot.produced += 1
+            self.tokens_generated += 1
+            if slot.produced >= slot.request.max_new_tokens:
+                # the lane is host-known complete the moment the step is
+                # dispatched (greedy decode emits exactly one token per
+                # step); free it now so the next admission overlaps with the
+                # in-flight computation — the token value lands at retire
+                meta.finished.append(slot)
+                self._evict(i)
+        return meta, nxt
+
+    def _launch(self, toks, counts, feedback):
+        """One batched device launch; returns the on-device next-token vec."""
+        chunk = self.prefill_chunk
+        prev = (self._prev_nxt if self._prev_nxt is not None
+                else self._zero_prev)
+        fb = jnp.asarray(feedback)
+        if self.paged:
+            tables, lengths = self._build_tables()
+            if chunk == 1 or int(counts.max()) <= 1:
+                nxt, self._pool.k, self._pool.v = self._pstep(
+                    self.params, self._pool.k, self._pool.v, tables, lengths,
+                    jnp.asarray(toks[:, 0]), fb, prev,
+                    jnp.asarray(counts > 0))
+            else:
+                nxt, self._pool.k, self._pool.v = self._pchunk(
+                    self.params, self._pool.k, self._pool.v, tables, lengths,
+                    jnp.asarray(toks), jnp.asarray(counts), fb, prev)
+            return nxt
+        self._apply_pending_snapshots()
+        # empty lanes still ride the batched step (pad token): their lanes
+        # are garbage afterwards and must be reset before the next admission
         self._dirty.update(i for i, s in enumerate(self.slots) if s is None)
+        self._dirty.update(range(self.n_slots, self.n_lanes))
+        toks4 = toks.reshape(self.n_lanes, chunk, 1, 1)
         if chunk == 1 or int(counts.max()) <= 1:
             # steady-state decode: every lane feeds one token, so skip the
             # chunk scan (it would run chunk-1 masked iterations per lane)
             nxt, self._cache = self._step_fn(self.params, self._cache,
-                                             jnp.asarray(toks[:, 0]))
+                                             jnp.asarray(toks4[:, 0]), fb,
+                                             prev)
         else:
             nxt, self._cache = self._chunk_fn(self.params, self._cache,
-                                              jnp.asarray(toks),
-                                              jnp.asarray(counts))
-        nxt = np.asarray(jax.device_get(nxt))
-        self.steps += 1
+                                              jnp.asarray(toks4),
+                                              jnp.asarray(counts), fb, prev)
+        return nxt
+
+    def _retire(self, pending: tuple[_StepMeta, Any]) -> None:
+        """Host-side completion of a dispatched step: transfer the argmax
+        vector and run everything that needed the token values."""
+        meta, nxt = pending
+        vals = np.asarray(jax.device_get(nxt)).reshape(-1)
+        for i, slot in meta.emitted:
+            tok = int(vals[i])
+            slot.request.tokens.append(tok)
+            self.journal.record_token(slot.request.id, tok)
+            slot.next_token = tok
+        for slot in meta.finished:
+            req = slot.request
+            req.finish_time = self.clock()
+            self.journal.complete(req.id)
+            self.completed.append(req)
+            # XAIF end-of-computation interrupt, then the per-request handler
+            self.platform.interrupts.fire(COMPLETE_LINE, req)
+            if req.on_complete is not None:
+                req.on_complete(req)
+
+    # -- paged-backend plumbing ----------------------------------------------
+
+    def _build_tables(self):
+        t = np.full((self.n_lanes, self._np_max), self._pool.null, np.int32)
+        lengths = np.zeros((self.n_lanes,), np.int32)
         for i, slot in enumerate(self.slots):
             if slot is None:
                 continue
-            was_prefilling = slot.prefilling
-            slot.fed += int(counts[i])
-            if was_prefilling:
-                self.prompt_tokens_processed += int(counts[i])
-                self._maybe_publish(i, slot)
-            if slot.prefilling:
-                # still consuming the prompt: teacher-force the next token
-                slot.next_token = slot.request.prompt[slot.fed]
-                continue
-            tok = int(nxt[i])
-            slot.request.tokens.append(tok)
-            self.journal.record_token(slot.request.id, tok)
-            slot.produced += 1
-            self.tokens_generated += 1
-            slot.next_token = tok
-            if slot.produced >= slot.request.max_new_tokens:
-                self._complete(i)
-        return True
+            t[i, :len(slot.block_pages)] = slot.block_pages
+            lengths[i] = slot.fed
+        return jnp.asarray(t), jnp.asarray(lengths)
+
+    def _ensure_pages(self, slot: _Slot, target: int) -> None:
+        """Grow the slot's block table to cover positions [0, target)."""
+        need = -(-target // self._ps)
+        while len(slot.block_pages) < need:
+            if not self._pool.free_count and self.pages is not None:
+                self.pages.clear()     # recycle unpinned shared residency
+            slot.block_pages.append(self._pool.alloc())
+
+    def _try_rematch(self, slot: _Slot) -> None:
+        """Mid-flight prefix re-match: adopt a sibling's freshly published
+        pages covering tokens this slot has not computed yet. Pure
+        block-table surgery — any partially-written private page in the
+        adopted range is released (its positions hold the same values the
+        shared page does, since both ran the same prompt prefix)."""
+        prompt = slot.request.prompt
+        m = self.pages.lookup(prompt)
+        if m <= slot.fed:
+            return
+        ps = self.pages.page_size
+        ext = self.pages.acquire_range(prompt, slot.fed // ps, m // ps)
+        if not ext:
+            return
+        adopted = m - slot.fed
+        for key, idx in ext:
+            self._pool.retain(idx)
+            b = len(key) // ps - 1
+            if b < len(slot.block_pages):
+                self._pool.release(slot.block_pages[b])
+                slot.block_pages[b] = idx
+            else:
+                slot.block_pages.append(idx)
+        slot.page_keys += tuple(k for k, _ in ext)
+        slot.fed = m
+        slot.next_token = prompt[m]
+        self.prompt_tokens_reused += adopted
+        self.rematches += 1
+        self.rematched_tokens += adopted
+        self.journal.note_rematch(slot.request.id, adopted)
+
+    def _stalled(self, slot: _Slot) -> bool:
+        """Dedup of concurrent identical cold prefills: if another live slot
+        already claimed the page this slot would compute next, wait (feed
+        nothing this step) and adopt the page when it publishes. Claims are
+        per-page and dropped the moment the claimant crosses the boundary,
+        so a waiter never outlives its claimant's current page."""
+        prompt = slot.request.prompt
+        ps = self.pages.page_size
+        boundary = (slot.fed // ps + 1) * ps
+        if boundary > len(prompt) - 1:
+            return False                   # tail extent: never publishable
+        key = prompt[:boundary]
+        if key in self.pages:
+            return False                   # resident: re-match handles it
+        claimant = self._claims.get(key)
+        if claimant is not None and claimant is not slot:
+            alive = any(s is claimant for s in self.slots)
+            if alive and claimant.prefilling:
+                return True
+            self._claims.pop(key, None)    # stale claim: steal it
+        self._claims[key] = slot
+        if key not in slot.claims:
+            slot.claims.append(key)
+        return False
+
+    def _drop_claims(self, slot: _Slot) -> None:
+        for key in slot.claims:
+            if self._claims.get(key) is slot:
+                del self._claims[key]
+        slot.claims = []
+
+    # -- lane-backend plumbing -----------------------------------------------
 
     def _apply_pending_snapshots(self) -> None:
-        """Copy-on-write: a slot admitted onto shared pages borrows them at
-        admission; its private lane copy materialises here, right before
-        the lane writes its first divergent token."""
+        """Copy-on-write (lane backend only): a slot admitted onto shared
+        pages borrows them at admission; its private lane copy materialises
+        here, right before the lane writes its first divergent token."""
         for i, slot in enumerate(self.slots):
             if slot is None or slot.pending_snapshot is None:
                 continue
@@ -498,38 +754,41 @@ class ContinuousBatchingEngine:
 
     def _maybe_publish(self, i: int, slot: _Slot) -> None:
         """Publish lane ``i``'s state when prefill lands on a page boundary
-        (chunk feeds are clamped so boundaries are always hit exactly)."""
+        (chunk feeds are clamped so boundaries are always hit exactly).
+        Paged backend: a refcount bump on the just-completed pool page —
+        O(1), no device work. Lane backend: a device gather of the lane."""
         if self.pages is None:
             return
         fed = slot.fed
         if fed % self.pages.page_size != 0:
             return
         key = slot.request.prompt[:fed]
+        self._claims.pop(key, None)        # computed: the claim is moot
         if not self.pages.wants(key):
             return
-        snapshot = jax.tree.map(lambda x: x[i], self._cache)
-        self.pages.publish(key, snapshot)
-
-    def _complete(self, i: int) -> None:
-        slot = self.slots[i]
-        req = slot.request
-        req.finish_time = self.clock()
-        self.journal.complete(req.id)
-        self._evict(i)
-        self.completed.append(req)
-        # XAIF end-of-computation interrupt, then the per-request handler
-        self.platform.interrupts.fire(COMPLETE_LINE, req)
-        if req.on_complete is not None:
-            req.on_complete(req)
+        if self.paged:
+            idx = slot.block_pages[fed // self.pages.page_size - 1]
+            self._pool.retain(idx)         # residency reference
+            if not self.pages.publish(key, idx):
+                self._pool.release(idx)
+        else:
+            snapshot = jax.tree.map(lambda x: x[i], self._cache)
+            self.pages.publish(key, snapshot)
 
     def _evict(self, i: int) -> None:
         slot = self.slots[i]
-        if slot is not None and slot.page_keys:
-            # refcount release — pinned pages outlive the slot only through
-            # the table's own residency, never through this pin
-            self.pages.release(slot.page_keys)
-            slot.page_keys = ()
+        if slot is not None:
+            if slot.page_keys:
+                # refcount release — pinned pages outlive the slot only
+                # through the table's own residency, never through this pin
+                self.pages.release(slot.page_keys)
+                slot.page_keys = ()
             slot.pending_snapshot = None
+            if self.paged:
+                for idx in slot.block_pages:
+                    self._pool.release(idx)
+                slot.block_pages = []
+            self._drop_claims(slot)
         self.slots[i] = None
         self._dirty.add(i)
         # shared refcount: gates only when no engine holds the bank
@@ -551,8 +810,14 @@ class ContinuousBatchingEngine:
         """Evict every lane; re-queue in-flight requests in FIFO order.
 
         Greedy decode is deterministic, so replay from the journal's prompts
-        reproduces the preempted requests' outputs bit-for-bit.
+        reproduces the preempted requests' outputs bit-for-bit. An in-flight
+        async step is retired first — its tokens belong to the
+        pre-preemption run and seed the journal's divergence cross-check.
         """
+        if self._pending is not None:
+            self._retire(self._pending)
+            self._pending = None
+            self._prev_nxt = None
         inflight = sorted(
             ((i, s) for i, s in enumerate(self.slots) if s is not None),
             key=lambda t: t[1].seq)
@@ -590,7 +855,7 @@ class ContinuousBatchingEngine:
         return done
 
     def stats(self) -> dict:
-        """Lifetime counters (monotone), plus page-table stats when the
+        """Lifetime counters (monotone), plus page-table/pool stats when the
         paged prefix cache is enabled."""
         out = {
             "steps": self.steps,
@@ -598,6 +863,11 @@ class ContinuousBatchingEngine:
             "prompt_tokens_processed": self.prompt_tokens_processed,
             "prompt_tokens_reused": self.prompt_tokens_reused,
             "prefill_chunk": self.prefill_chunk,
+            "backend": "paged" if self.paged else "lanes",
+            "async_dispatch": self.async_dispatch,
+            "stalls": self.stalls,
+            "rematches": self.rematches,
+            "rematched_tokens": self.rematched_tokens,
             "completed": len(self.completed),
             "rejected": self.rejected,
             "queued": len(self.queue),
@@ -607,4 +877,8 @@ class ContinuousBatchingEngine:
             out["pages"] = dict(self.pages.stats,
                                 resident=self.pages.resident,
                                 pinned=self.pages.pinned)
+        if self._pool is not None:
+            out["pool"] = dict(self._pool.stats,
+                               pages=self._pool.n_pages,
+                               in_use=self._pool.in_use)
         return out

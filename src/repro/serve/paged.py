@@ -1,0 +1,165 @@
+"""Global KV page pool + jitted paged decode steps for the serving engine.
+
+This is the device side of the paged backend: one pool of fixed-size KV
+pages shared by every decode slot (and by the prefix page table), reached
+per step through per-slot *block tables*. It replaces the PR 2 layout of
+one full-length cache lane per slot — prefix adoption becomes block-table
+pointing (no copy-on-write lane materialisation), publishing a page is a
+host-side refcount bump (no device gather), and eviction returns page ids
+to a free list instead of resetting whole lanes.
+
+Invariants:
+
+* **Pool refcounts never go negative.** Every page id handed out by
+  :meth:`PagePool.alloc` / pinned by :meth:`PagePool.retain` is released
+  exactly once; over-release raises (the ``Platform.bank_release``
+  discipline, applied to pages).
+* **A referenced page is never recycled.** A page returns to the free list
+  only when its last holder (slot block table or page-table residency)
+  releases it.
+* **The null page is write-never.** Row ``null`` pads unused block-table
+  entries; attention masks every position at or beyond a slot's length, so
+  its contents are unobservable — appends target it only via the
+  out-of-bounds drop trick for masked lanes, which writes nothing.
+
+The jitted step functions take *device feedback*: a decoding lane's input
+token can come straight from the previous step's on-device argmax
+(``feedback``/``prev``), so the host never has to block on a transfer
+before dispatching the next step — the data path of the engine's async
+double-buffered dispatch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.models import registry
+from repro.models.config import ModelConfig
+
+__all__ = ["PagePool", "paged_step_fn", "paged_chunk_fn"]
+
+# jitted paged kernels shared across engine instances (jax then caches
+# compilations per pool/table shape)
+_PAGED_FNS: dict = {}
+
+
+class PagePool:
+    """Fixed-size KV page pool with a free list and per-page refcounts.
+
+    Device state is a (k, v) pair shaped ``(L, n_pages + 1, page_size, Kh,
+    Dh)`` — the extra row is the null page (see module docstring). Host
+    state is the allocator: ``alloc()`` hands out a page id with one
+    reference; ``retain``/``release`` follow the shared-bank discipline.
+    """
+
+    def __init__(self, cfg: ModelConfig, n_pages: int, page_size: int):
+        if n_pages < 1 or page_size < 1:
+            raise ValueError("pool needs at least one page of one token")
+        self.cfg = cfg
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.null = n_pages                    # sentinel row, never written
+        self.k, self.v = registry.paged_pool_init(cfg, n_pages + 1, page_size)
+        self._refs = np.zeros((n_pages,), np.int32)
+        self._free = list(range(n_pages - 1, -1, -1))   # pop() -> 0, 1, 2, ...
+        self.stats = {"allocated": 0, "freed": 0, "high_water": 0}
+
+    def alloc(self) -> int:
+        """Take a free page (one reference held by the caller)."""
+        if not self._free:
+            raise RuntimeError(
+                f"page pool exhausted ({self.n_pages} pages, all referenced)")
+        idx = self._free.pop()
+        self._refs[idx] = 1
+        self.stats["allocated"] += 1
+        self.stats["high_water"] = max(self.stats["high_water"], self.in_use)
+        return idx
+
+    def retain(self, idx: int) -> None:
+        """Add a reference to a live page (block-table pin, residency, ...)."""
+        if self._refs[idx] <= 0:
+            raise ValueError(f"page {idx} retained while free")
+        self._refs[idx] += 1
+
+    def release(self, idx: int) -> None:
+        """Drop one reference; the last release recycles the page."""
+        if self._refs[idx] <= 0:
+            raise ValueError(f"page {idx} released more than retained")
+        self._refs[idx] -= 1
+        if self._refs[idx] == 0:
+            self._free.append(idx)
+            self.stats["freed"] += 1
+
+    @property
+    def in_use(self) -> int:
+        """Pages currently referenced (allocated and not yet recycled)."""
+        return self.n_pages - len(self._free)
+
+    @property
+    def free_count(self) -> int:
+        """Pages available for allocation."""
+        return len(self._free)
+
+    def refcounts(self) -> dict[int, int]:
+        """Live page id -> reference count (for tests and debugging)."""
+        return {i: int(r) for i, r in enumerate(self._refs) if r > 0}
+
+
+def paged_step_fn(cfg: ModelConfig):
+    """Jitted single-token paged decode over every lane.
+
+    Signature: ``(params, pool_k, pool_v, tables, lengths, toks, feedback,
+    prev, mask) -> (next_tokens, pool_k', pool_v')`` where ``toks`` (B,) are
+    host-chosen tokens, ``feedback`` (B,) selects the previous step's
+    on-device argmax ``prev`` instead (async double-buffering), and ``mask``
+    (B,) gates the KV append (False = idle/stalled lane riding the batch).
+    Pools are donated.
+    """
+    key = ("step", cfg)
+    if key not in _PAGED_FNS:
+        def step(params, pool_k, pool_v, tables, lengths, toks, feedback,
+                 prev, mask):
+            tok = jnp.where(feedback, prev, toks)
+            logits, pool_k, pool_v = registry.decode_step_paged(
+                params, cfg, pool_k, pool_v, tables, lengths, tok,
+                append_mask=mask)
+            return (jnp.argmax(logits, -1).astype(jnp.int32), pool_k, pool_v)
+
+        _PAGED_FNS[key] = jax.jit(step, donate_argnums=(1, 2))
+    return _PAGED_FNS[key]
+
+
+def paged_chunk_fn(cfg: ModelConfig, chunk: int):
+    """Jitted chunked step: up to ``chunk`` tokens per lane in one launch.
+
+    Scans the single-token paged step; iterations past a lane's ``count``
+    are masked appends (the pool is untouched bitwise, so a decode lane
+    with ``count == 1`` sees exactly one append). The returned token is the
+    argmax after each lane's last fed token. Pools are donated.
+    """
+    key = ("chunk", cfg, chunk)
+    if key not in _PAGED_FNS:
+        def step(params, pool_k, pool_v, tables, lengths, toks, counts,
+                 feedback, prev):
+            def body(carry, xs):
+                pool_k, pool_v = carry
+                j, tok_j = xs
+                tok = jnp.where((j == 0) & feedback, prev, tok_j)
+                logits, pool_k, pool_v = registry.decode_step_paged(
+                    params, cfg, pool_k, pool_v, tables, lengths + j, tok,
+                    append_mask=j < counts)
+                return ((pool_k, pool_v),
+                        jnp.argmax(logits, -1).astype(jnp.int32))
+
+            (pool_k, pool_v), outs = lax.scan(
+                body, (pool_k, pool_v),
+                (jnp.arange(chunk, dtype=jnp.int32), toks.T))
+            last = jnp.take_along_axis(
+                outs.T, jnp.maximum(counts - 1, 0)[:, None], 1)[:, 0]
+            return last, pool_k, pool_v
+
+        _PAGED_FNS[key] = jax.jit(step, donate_argnums=(1, 2))
+    return _PAGED_FNS[key]

@@ -1,12 +1,20 @@
 """Paged prefix cache: refcounted KV pages shared across requests.
 
-The engine's device cache is one lane per decode slot; this module is the
-host-side page table layered on top of it, the serving rendition of the
+This module is the host-side page table, the serving rendition of the
 paper's refcounted memory banks. A *page* is the model state after
 consuming a fixed-size extent of ``page_size`` prompt tokens: pages chain
 (page *k* of a prompt extends page *k-1*), and a request whose prompt
 starts with an already-resident chain is admitted with those tokens
 pre-consumed — no prefill work for the shared prefix.
+
+Page *payloads* are opaque to the table. Under the engine's paged backend
+a payload is a pool page id (:class:`repro.serve.paged.PagePool`) —
+adoption is block-table pointing and publication a refcount bump; under
+the lane backend it is a full batch-1 cache snapshot, copied into the
+slot's lane on first write (the copy-on-write bullet below). Mid-flight
+re-match (:meth:`PageTable.acquire_range`) lets a slot that is already
+prefilling adopt a sibling's freshly published pages, and ``on_evict``
+hands dropped payloads back to their owner (the pool's free list).
 
 Sharing follows the ``Platform.bank_acquire``/``bank_release`` discipline:
 
@@ -65,8 +73,9 @@ class PrefixMatch:
     """Result of :meth:`PageTable.acquire`: a pinned chain of pages."""
 
     tokens_matched: int          # prompt tokens covered by the chain
-    snapshot: Any                # state after consuming tokens_matched tokens
+    snapshot: Any                # payload of the chain's last page
     keys: tuple                  # chain keys, shortest first (release handle)
+    chain: tuple = ()            # per-page payloads, shortest-key first
 
 
 class PageTable:
@@ -79,7 +88,7 @@ class PageTable:
     """
 
     def __init__(self, page_size: int, *, capacity_pages: int | None = None,
-                 platform=None):
+                 platform=None, on_evict=None):
         if page_size < 1:
             raise ValueError("page_size must be >= 1 token")
         if capacity_pages is not None and capacity_pages < 1:
@@ -87,6 +96,11 @@ class PageTable:
         self.page_size = page_size
         self.capacity_pages = capacity_pages
         self.platform = platform
+        # called with the dropped page's payload on every eviction — the
+        # paged engine uses it to return pool page ids to the free list
+        # (payloads are opaque to the table: device snapshots in lane mode,
+        # pool indices in paged mode)
+        self.on_evict = on_evict
         self._pages: dict[tuple, Page] = {}
         self._tick = 0
         self._next_bank = 0
@@ -97,6 +111,10 @@ class PageTable:
             "published": 0,        # pages added
             "evicted": 0,          # pages LRU-evicted
             "cow_copies": 0,       # private lane copies materialised
+            "rematches": 0,        # mid-flight prefix adoptions
+            "rematched_pages": 0,  # pages pinned via acquire_range (the
+                                   # engine counts token-granular adoption
+                                   # in its own rematched_tokens)
         }
 
     # -- lookup / pinning ----------------------------------------------------
@@ -141,7 +159,35 @@ class PageTable:
         self.stats["tokens_reused"] += matched
         return PrefixMatch(tokens_matched=matched,
                            snapshot=self._pages[keys[-1]].snapshot,
-                           keys=tuple(keys))
+                           keys=tuple(keys),
+                           chain=tuple(self._pages[k].snapshot for k in keys))
+
+    def acquire_range(self, prompt: Sequence[int], from_block: int,
+                      to_block: int) -> list[tuple[tuple, Any]]:
+        """Pin resident pages covering blocks ``[from_block, to_block)`` of
+        ``prompt`` — the mid-flight re-match: a slot that already consumed
+        ``from_block`` pages' worth of tokens adopts a sibling's freshly
+        published pages instead of recomputing them. Returns
+        ``[(key, payload), ...]`` shortest-key first; every returned page is
+        individually pinned and must go back through :meth:`release` (the
+        caller appends the keys to its release handle)."""
+        prompt = tuple(int(t) for t in prompt)
+        ps = self.page_size
+        out = []
+        self._tick += 1
+        for b in range(from_block, to_block):
+            key = prompt[:(b + 1) * ps]
+            page = self._pages.get(key)
+            if page is None:
+                break                      # chain must stay contiguous
+            page.refs += 1
+            page.last_used = self._tick
+            out.append((key, page.snapshot))
+        if out:
+            # page-granular accounting; tokens_reused stays admission-only
+            self.stats["rematches"] += 1
+            self.stats["rematched_pages"] += len(out)
+        return out
 
     def release(self, keys: Sequence[tuple]) -> None:
         """Unpin a chain previously returned by :meth:`acquire`.
@@ -233,6 +279,8 @@ class PageTable:
             self._pages[page.key[:-self.page_size]].children -= 1
         if page.bank is not None:
             self.platform.bank_release(page.bank)
+        if self.on_evict is not None:
+            self.on_evict(page.snapshot)
 
     def clear(self) -> None:
         """Drop every unpinned page (pinned chains survive)."""

@@ -1,10 +1,14 @@
 """Deterministic simulation of the serving engine under scripted traffic.
 
 No wall clock anywhere: a :class:`FakeClock` provides time, arrivals come
-from a scripted :class:`Trace`, and every engine step costs a fixed
-``step_time`` of fake time (one batched decode launch). This makes
+from a scripted :class:`Trace`, and every engine step is charged a fixed
+cost — ``step_time`` of device compute plus ``dispatch_time`` of host
+scheduling. A synchronous engine pays the two serially; an engine running
+async double-buffered dispatch overlaps them, modelled with an explicit
+device-busy-until pipeline (see :class:`Simulator`). This makes
 throughput, latency, and fairness assertions exactly reproducible — the
-serving analogue of the repo's step-indexed data pipeline.
+serving analogue of the repo's step-indexed data pipeline — including the
+measured win from host/device overlap.
 
 The same harness drives two admission policies:
 
@@ -110,17 +114,34 @@ class SimReport:
 
 
 class Simulator:
-    """Drive an engine step-by-step from a scripted arrival trace."""
+    """Drive an engine step-by-step from a scripted arrival trace.
+
+    The cost model has two components per engine step: ``step_time`` (the
+    device computing one batched launch) and ``dispatch_time`` (the host
+    building the batch, journaling, scheduling — everything in
+    ``engine.step()`` outside the device). A synchronous engine pays them
+    serially: ``dispatch_time + step_time`` per step. An engine with
+    ``async_dispatch=True`` overlaps them — the host dispatches step N+1
+    while the device chews on step N — so the steady-state cost is
+    ``max(dispatch_time, step_time)`` per step, modelled with an explicit
+    device-busy-until timestamp (depth-1 double buffering: the host blocks
+    on step N-1's completion only after dispatching step N). The default
+    ``dispatch_time=0.0`` reproduces the PR 1/PR 2 accounting exactly.
+    """
 
     def __init__(self, engine: ContinuousBatchingEngine, trace: Sequence[Arrival],
                  clock: FakeClock, *, step_time: float = 1.0,
-                 sequential: bool = False):
+                 dispatch_time: float = 0.0, sequential: bool = False):
         if engine.clock is not clock:
             raise ValueError("engine must share the simulator's clock")
+        if step_time < 0 or dispatch_time < 0:
+            raise ValueError("step/dispatch times cannot be negative")
         self.engine = engine
         self.clock = clock
         self.step_time = step_time
+        self.dispatch_time = dispatch_time
         self.sequential = sequential
+        self._device_free = clock.t          # device pipeline: busy-until
         self.pending = collections.deque(
             sorted(trace, key=lambda a: (a.time,)))
         # stable sort keeps same-time arrivals in trace order (FIFO semantics)
@@ -136,6 +157,28 @@ class Simulator:
             if self.sequential:
                 break                    # at most one request in flight
 
+    def _timed_step(self) -> None:
+        """Advance the engine one step and charge the cost model."""
+        eng = self.engine
+        steps_before = eng.steps
+        eng.step()
+        launched = eng.steps > steps_before
+        if not getattr(eng, "async_dispatch", False):
+            if launched:
+                self.clock.advance(self.dispatch_time + self.step_time)
+            return
+        if not launched:
+            # flush-only step (retiring the in-flight launch at drain time)
+            self.clock.advance_to(self._device_free)
+            return
+        dispatched = self.clock.t + self.dispatch_time
+        prev_free = self._device_free
+        # device starts when both the dispatch and its previous step are done
+        self._device_free = max(dispatched, prev_free) + self.step_time
+        # depth-1 double buffer: after dispatching step N the host retires
+        # step N-1, blocking until the device finished it
+        self.clock.advance_to(max(dispatched, prev_free))
+
     def run(self, max_steps: int = 1_000_000) -> SimReport:
         """Deliver arrivals and step the engine until the trace drains;
         returns this run's deltas (a reused engine never double-counts)."""
@@ -148,8 +191,7 @@ class Simulator:
         for _ in range(max_steps):
             self._deliver_due()
             if eng.busy:
-                eng.step()
-                self.clock.advance(self.step_time)
+                self._timed_step()
             elif self.pending:
                 # idle: jump to the next arrival instead of spinning
                 self.clock.advance_to(self.pending[0].time)
@@ -157,6 +199,8 @@ class Simulator:
                 break
         else:
             raise RuntimeError(f"simulation did not drain in {max_steps} steps")
+        if getattr(eng, "async_dispatch", False):
+            self.clock.advance_to(self._device_free)   # drain the pipeline
         return SimReport(elapsed=self.clock.t - t0, steps=eng.steps - steps0,
                          tokens_generated=eng.tokens_generated - tokens0,
                          completed=list(eng.completed[done0:]),

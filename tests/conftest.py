@@ -27,3 +27,39 @@ def run_subprocess(code: str, devices: int = 1, timeout: int = 420):
 @pytest.fixture
 def subproc():
     return run_subprocess
+
+
+@pytest.fixture(scope="session", autouse=True)
+def shared_jit_cache():
+    """One jit/compile cache shared by every engine test in the session.
+
+    The engine-test harness (``engine_sim.CANONICAL``) pads every engine to
+    one canonical device shape (4 lanes, 48 cache positions), so the dozens
+    of engines built across ``test_engine.py`` / ``test_pages.py`` /
+    ``test_ft.py`` with different ``slots``/``max_len`` all hit the *same*
+    jitted-and-compiled step function (the module-level caches in
+    ``serve/engine.py`` / ``serve/paged.py``) instead of compiling one XLA
+    program per shape. Extra lanes ride the batch idle and extra cache
+    positions are masked; outputs are unchanged — the bit-identity tests
+    hold the padded engines to that.
+
+    jax's on-disk persistent compilation cache is opt-in only
+    (``REPRO_JAX_CACHE_DIR=<dir>``): on this jax/jaxlib CPU build,
+    deserialized executables for the donated training step produce NaNs and
+    then segfault (reproduced via ``launch/train.py --resume``), so it must
+    never be on by default for a repo whose headline claim is bit-identical
+    determinism.
+    """
+    cache_dir = os.environ.get("REPRO_JAX_CACHE_DIR")
+    if cache_dir:
+        import jax
+
+        pathlib.Path(cache_dir).mkdir(parents=True, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.3)
+
+    sys.path.insert(0, str(REPO / "tests"))
+    import engine_sim
+
+    engine_sim.CANONICAL.update(lane_batch=4, device_len=48)
+    yield

@@ -27,6 +27,12 @@ __all__ = [
 
 _PARAM_CACHE: dict[str, tuple] = {}
 
+# Canonical device shapes for every test engine (set by the session-scoped
+# ``shared_jit_cache`` fixture in conftest.py): padding lanes / cache
+# positions up to one shared shape lets every engine test reuse a single
+# compiled step function. ``None`` = no padding (engine uses its own shape).
+CANONICAL: dict = {"lane_batch": None, "device_len": None}
+
 
 def smoke_params(arch: str = "granite_3_2b", seed: int = 0):
     """(cfg, params) for a tiny CPU model; cached per arch across tests."""
@@ -53,6 +59,8 @@ def make_engine(arch: str = "granite_3_2b", *, slots: int = 3,
         platform = Platform(XHeepConfig(n_banks=n_banks))
         for i in range(n_banks):        # the platform owner gates idle banks
             platform.power.clock_gate(f"bank{i}")
+    engine_kwargs.setdefault("lane_batch", CANONICAL["lane_batch"])
+    engine_kwargs.setdefault("device_len", CANONICAL["device_len"])
     eng = ContinuousBatchingEngine(cfg, params, slots=slots, max_len=max_len,
                                    clock=clock, platform=platform,
                                    queue_capacity=queue_capacity,

@@ -326,6 +326,122 @@ def test_shared_platform_power_state_not_clobbered():
     assert platform.power.state("bank0") is PowerState.CLOCK_GATED
 
 
+def test_paged_backend_bit_identical_to_lane_backend():
+    """The tentpole invariant: the paged pool + block-table decode emits
+    exactly the tokens the PR 2 per-lane cache emits."""
+    _, paged = run_trace("granite_3_2b",
+                         staggered_trace(make_requests(5), gap=1.0), slots=2)
+    lane_eng, lane = run_trace("granite_3_2b",
+                               staggered_trace(make_requests(5), gap=1.0),
+                               slots=2, paged=False)
+    assert lane_eng.stats()["backend"] == "lanes"
+    assert _tokens(paged) == _tokens(lane)
+
+
+def test_async_dispatch_bit_identical_and_overlaps_on_sim_clock():
+    """Async double-buffered dispatch: same tokens as synchronous stepping,
+    strictly less fake time once host dispatch has a nonzero cost."""
+    def run(async_on):
+        eng, clock = make_engine(slots=3, async_dispatch=async_on)
+        sim = Simulator(eng, staggered_trace(make_requests(6), gap=1.0),
+                        clock, dispatch_time=1.0)
+        return eng, sim.run()
+
+    eng_a, rep_a = run(True)
+    eng_s, rep_s = run(False)
+    assert {r.id: tuple(r.tokens) for r in eng_a.completed} == \
+        {r.id: tuple(r.tokens) for r in eng_s.completed}
+    assert rep_a.tokens_generated == rep_s.tokens_generated
+    assert rep_a.elapsed < rep_s.elapsed
+    assert rep_a.throughput > 1.5 * rep_s.throughput
+
+
+def test_async_dispatch_preempt_flushes_and_replays_bit_identical():
+    """preempt() with a step in flight retires it first; replay reproduces
+    the pre-preemption tokens bit-for-bit (journal cross-checked)."""
+    base_eng, _ = run_trace("granite_3_2b", burst_trace(make_requests(5)),
+                            slots=2)
+    eng, _ = make_engine(slots=2, async_dispatch=True)
+    for r in make_requests(5):
+        eng.submit(r)
+    for _ in range(4):
+        eng.step()                 # leaves one dispatched, unretired step
+    assert eng.busy
+    requeued = eng.preempt()
+    assert requeued and eng.active == 0
+    eng.run_until_idle()
+    assert _tokens(base_eng) == {r.id: tuple(r.tokens) for r in eng.completed}
+
+
+def test_dedup_concurrent_identical_cold_prefills():
+    """Two cold same-prefix requests: the second stalls on the first's
+    in-flight pages and adopts them instead of recomputing the shared
+    extent — and the outputs still match no-sharing sequential serving."""
+    reqs = lambda: shared_prefix_requests(2, prefix_len=16, tail_len=3,
+                                          new_tokens=4)
+    eng, _ = run_trace("granite_3_2b", burst_trace(reqs()), slots=2,
+                       max_len=40, page_size=8)
+    seq_eng, _ = run_trace("granite_3_2b", burst_trace(reqs()), slots=2,
+                           max_len=40, sequential=True)
+    assert _tokens(eng) == _tokens(seq_eng)
+    st = eng.stats()
+    assert st["stalls"] > 0                    # the waiter actually waited
+    assert st["rematches"] > 0                 # ... then adopted the pages
+    total_prompt = sum(len(r.prompt) for r in eng.completed)
+    # the shared extent ran once: everything else was reused, not recomputed
+    assert st["prompt_tokens_processed"] + st["prompt_tokens_reused"] \
+        == total_prompt
+    assert st["prompt_tokens_reused"] >= 16    # at least the shared pages
+
+
+def test_midflight_rematch_adopts_sibling_pages():
+    """A slot admitted on a cold table re-checks at page boundaries and
+    adopts a sibling's freshly published pages (ROADMAP open item)."""
+    reqs = shared_prefix_requests(3, prefix_len=16, tail_len=3, new_tokens=4)
+    # staggered by one step: the second request is admitted before the
+    # first has published anything, so only mid-flight re-match can help it
+    eng, _ = run_trace("granite_3_2b", staggered_trace(reqs, gap=1.0),
+                       slots=3, max_len=40, page_size=8)
+    st = eng.stats()
+    assert st["rematches"] > 0
+    assert eng.rematched_tokens > 0
+    assert eng.journal.get(reqs[1].id).rematched > 0
+    seq_eng, _ = run_trace(
+        "granite_3_2b",
+        staggered_trace(shared_prefix_requests(3, prefix_len=16, tail_len=3,
+                                               new_tokens=4), gap=1.0),
+        slots=3, max_len=40, sequential=True)
+    assert _tokens(eng) == _tokens(seq_eng)
+
+
+def test_async_paged_sharing_full_stack_bit_identical():
+    """Everything at once — paged pool, prefix sharing, chunked prefill,
+    dedup, re-match, async dispatch — against plain sequential serving."""
+    trace = lambda: staggered_trace(
+        shared_prefix_requests(6, prefix_len=16, tail_len=3, new_tokens=4),
+        gap=1.0)
+    eng, _ = run_trace("granite_3_2b", trace(), slots=2, max_len=40,
+                       page_size=8, prefill_chunk=4, async_dispatch=True)
+    seq_eng, _ = run_trace("granite_3_2b", trace(), slots=2, max_len=40,
+                           sequential=True)
+    assert _tokens(eng) == _tokens(seq_eng)
+    assert eng.stats()["pages"]["tokens_reused"] > 0
+
+
+def test_pool_refcounts_drain_to_free_list():
+    """Every pool page returns to the free list once slots and the table
+    release it — the page-level bank_release discipline."""
+    eng, clock = make_engine(slots=2, max_len=40, page_size=8)
+    Simulator(eng, burst_trace(shared_prefix_requests(
+        4, prefix_len=16, tail_len=3, new_tokens=4)), clock).run()
+    pool = eng._pool
+    # only table-resident pages may stay referenced, exactly once each
+    assert pool.in_use == eng.pages.resident
+    assert all(r == 1 for r in pool.refcounts().values())
+    eng.pages.clear()
+    assert pool.in_use == 0
+
+
 def test_journal_detects_replay_divergence():
     """The determinism canary: a replay emitting a different token than the
     pre-preemption run must fail loudly, not silently diverge."""
