@@ -35,13 +35,17 @@ bench-serve:
 	$(PY) benchmarks/serve_bench.py --requests 16 --slots 4 --gap 2.0 \
 		--new-tokens 8 $(BENCH_PASSTHRU) $(BENCH_ARGS)
 
-# BENCH_serve.json artifact: default trace + shared-prefix trace + paged
-# kernel microbench, merged into one JSON tracked across PRs
+# BENCH_serve.json artifact: default trace + shared-prefix trace +
+# multi-model cluster trace + paged kernel microbench, merged into one
+# JSON tracked across PRs (every trace asserts bit-identical outputs
+# before its numbers are reported)
 bench-json:
 	$(PY) benchmarks/serve_bench.py --requests 16 --slots 4 --gap 2.0 \
 		--new-tokens 8 --json --bench-json
 	$(PY) benchmarks/serve_bench.py --requests 16 --slots 4 --gap 2.0 \
 		--new-tokens 8 --shared-prefix --json --bench-json
+	$(PY) benchmarks/serve_bench.py --requests 16 --slots 4 --gap 2.0 \
+		--new-tokens 8 --multi-model --json --bench-json
 	$(PY) benchmarks/serve_bench.py --slots 4 --kernel-bench --json --bench-json
 
 docs-check:

@@ -17,6 +17,13 @@ overlaps them (see :class:`repro.serve.sim.Simulator`). Modes:
   against the PR 2 sharing engine.
 * ``--kernel-bench`` — microbenchmark of the fused paged-attention Pallas
   kernel (interpret mode on CPU) against its pure-jax reference.
+* ``--multi-model`` — the PR 4 cluster workload: two models / three
+  engines (two replicas of one model sharing a namespace, plus a second
+  model) on one ``ServeCluster`` — one shared ``PagePool``/``PageTable``
+  — against the same three engines serving the same traffic isolated
+  (private pools/tables). Outputs are asserted bit-identical per engine
+  before any number is reported; the report carries cross-engine page
+  reuse and the consolidated pool high-water vs the isolated pools.
 
 ``--json`` prints the report as JSON; ``--bench-json`` additionally merges
 it into ``BENCH_serve.json`` at the repo root (``make bench-json`` runs all
@@ -197,6 +204,152 @@ def run_shared_prefix(cfg, params, args) -> tuple[dict, float]:
     return out, vs_pr2
 
 
+def run_multi_model(args) -> tuple[dict, float]:
+    """Multi-model cluster vs the same engines isolated.
+
+    Three engines, two models: ``rep-a``/``rep-b`` serve ``--arch`` as
+    replicas under one namespace (their shared-prefix traffic aliases
+    *across* engines on the cluster), ``alt`` serves ``--arch-b`` in its
+    own namespace (isolated prefixes, shared pool budget). ``rep-b`` is an
+    elastic scale-out replica: its traffic starts after ``rep-a`` has
+    absorbed the first wave — on the cluster it finds the shared prefix
+    pages already resident (admitted pre-consumed, zero prefill for the
+    hot prefix), while the isolated baseline pays the cold prefill again.
+    The isolated baseline runs each engine on its own pool/table and own
+    clock; since isolated engines run concurrently in real deployments,
+    its aggregate throughput is total tokens over the slowest engine's
+    span.
+    """
+    from repro.serve.cluster import ServeCluster
+    from repro.serve.sim import ClusterSimulator, tag_engine
+
+    cfg_a = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    cfg_b = (configs.smoke(args.arch_b) if args.smoke
+             else configs.get(args.arch_b))
+    params_a = P.init_tree(registry.decls(cfg_a), jax.random.key(args.seed))
+    params_b = P.init_tree(registry.decls(cfg_b),
+                           jax.random.key(args.seed + 1))
+
+    n = max(2, args.requests // 2)
+    prefix_len, ps = args.shared_prefix or 16, args.page_size
+    need = prefix_len + args.tail_len + args.new_tokens + 1
+    max_len = max(args.max_len, need)
+    alt_prefix = [(19 * j) % 239 + 2 for j in range(prefix_len)]
+    make = {
+        "rep-a": lambda: shared_prefix_requests(
+            n, prefix_len=prefix_len, tail_len=args.tail_len,
+            new_tokens=args.new_tokens, id_prefix="ga"),
+        "rep-b": lambda: shared_prefix_requests(
+            n, prefix_len=prefix_len, tail_len=args.tail_len,
+            new_tokens=args.new_tokens, id_prefix="gb"),
+        "alt": lambda: shared_prefix_requests(
+            n, prefix_len=prefix_len, tail_len=args.tail_len,
+            new_tokens=args.new_tokens, prefix=alt_prefix, id_prefix="sl"),
+    }
+    members = [("rep-a", cfg_a, params_a, cfg_a.name),
+               ("rep-b", cfg_a, params_a, cfg_a.name),
+               ("alt", cfg_b, params_b, cfg_b.name)]
+    np_max = -(-max_len // ps)
+    pool_pages = 3 * args.slots * np_max + 16
+    # rep-b scales out mid-run: its trace starts once rep-a's first wave
+    # is underway, so the shared prefix is resident on the cluster
+    starts = {"rep-a": 0.0, "rep-b": n * args.gap, "alt": 0.0}
+
+    def isolated(name, cfg, params):
+        clock = FakeClock()
+        eng = ContinuousBatchingEngine(
+            cfg, params, slots=args.slots, max_len=max_len, clock=clock,
+            prefill_chunk=args.prefill_chunk, page_size=ps)
+        sim = Simulator(eng, staggered_trace(make[name](), gap=args.gap,
+                                             start=starts[name]),
+                        clock, step_time=args.step_time,
+                        dispatch_time=args.dispatch_time)
+        return eng, sim.run()
+
+    w0 = time.perf_counter()
+    iso = {name: isolated(name, cfg, params)
+           for name, cfg, params, _ in members}
+    iso_wall = time.perf_counter() - w0
+
+    clock = FakeClock()
+    cluster = ServeCluster(pool_pages=pool_pages, page_size=ps, clock=clock)
+    for name, cfg, params, ns in members:
+        cluster.add_engine(cfg, params, name=name, namespace=ns,
+                           slots=args.slots, max_len=max_len,
+                           prefill_chunk=args.prefill_chunk)
+    trace = [a for name, _, _, _ in members
+             for a in tag_engine(staggered_trace(make[name](), gap=args.gap,
+                                                 start=starts[name]), name)]
+    w0 = time.perf_counter()
+    rep = ClusterSimulator(cluster, trace, clock, step_time=args.step_time,
+                           dispatch_time=args.dispatch_time).run()
+    wall = time.perf_counter() - w0
+
+    # the perf claim is only valid if the outputs are the same outputs
+    for name, _, _, _ in members:
+        _assert_identical([(f"isolated:{name}", iso[name][0]),
+                           (f"cluster:{name}", cluster.engines[name])])
+
+    iso_tokens = sum(r.tokens_generated for _, r in iso.values())
+    iso_elapsed = max(r.elapsed for _, r in iso.values())
+    iso_tp = iso_tokens / iso_elapsed
+    speedup = rep.throughput / iso_tp
+    engines = {name: {
+        "arch": eng.cfg.name,
+        "namespace": eng.namespace,
+        "prompt_tokens_reused": eng.prompt_tokens_reused,
+        "prompt_tokens_processed": eng.prompt_tokens_processed,
+        "rematches": eng.rematches,
+    } for name, eng in cluster.engines.items()}
+    cstats = cluster.stats()
+    out = {"arch": cfg_a.name, "arch_b": cfg_b.name,
+           "requests_per_engine": n, "slots": args.slots, "gap": args.gap,
+           "shared_prefix": prefix_len, "page_size": ps,
+           "prefill_chunk": args.prefill_chunk,
+           "dispatch_time": args.dispatch_time, "step_time": args.step_time,
+           "cluster": {
+               "elapsed_sim": rep.elapsed, "steps": rep.steps,
+               "tokens": rep.tokens_generated,
+               "throughput_tok_per_sim_s": round(rep.throughput, 4),
+               "wall_s": round(wall, 3),
+               "pool_pages": pool_pages,
+               "pool_device_pages": cluster.pool.device_pages,
+               "pool_high_water": cstats["pool"]["high_water"],
+               "table_resident_by_ns": cstats["table"]["by_namespace"],
+               "engines": engines,
+           },
+           "isolated": {
+               "elapsed_sim": iso_elapsed, "tokens": iso_tokens,
+               "throughput_tok_per_sim_s": round(iso_tp, 4),
+               "wall_s": round(iso_wall, 3),
+               "pool_pages_total": sum(e._pool.n_pages
+                                       for e, _ in iso.values()),
+               "pool_device_pages_total": sum(e._pool.device_pages
+                                              for e, _ in iso.values()),
+               "pool_high_water_total": sum(e._pool.stats["high_water"]
+                                            for e, _ in iso.values()),
+           },
+           "cluster_speedup_vs_isolated": round(speedup, 3)}
+    if not args.json:
+        print(f"cluster [3 engines, 2 models, one {pool_pages}-id pool, "
+              f"{cluster.pool.device_pages} device pages across "
+              f"{len(cluster.pool._arenas)} arenas]: "
+              f"{rep.tokens_generated} tokens in {rep.elapsed:.1f} "
+              f"sim-s ({rep.throughput:.3f} tok/sim-s), pool high-water "
+              f"{cstats['pool']['high_water']}")
+        print(f"isolated [3 engines, private pools, "
+              f"{out['isolated']['pool_device_pages_total']} device pages "
+              f"total]: {iso_tokens} tokens in {iso_elapsed:.1f} sim-s "
+              f"({iso_tp:.3f} tok/sim-s), pool high-water "
+              f"{out['isolated']['pool_high_water_total']}")
+        for name, st in engines.items():
+            print(f"  {name} [{st['arch']} ns={st['namespace']}]: "
+                  f"{st['prompt_tokens_reused']} prompt tokens reused")
+        print(f"cluster vs isolated: {speedup:.2f}x aggregate tokens/s; "
+              f"outputs bit-identical per engine")
+    return out, speedup
+
+
 def run_kernel_bench(cfg, args) -> tuple[dict, float]:
     """Microbenchmark the fused paged-attention kernel vs its reference.
 
@@ -289,6 +442,11 @@ def main(argv=None):
     ap.add_argument("--kernel-bench", action="store_true",
                     help="microbenchmark the paged-attention kernel vs ref")
     ap.add_argument("--kernel-iters", type=int, default=20)
+    ap.add_argument("--multi-model", action="store_true",
+                    help="multi-model cluster workload: two models / three "
+                         "engines on one shared pool vs isolated engines")
+    ap.add_argument("--arch-b", default="stablelm-3b",
+                    help="second model of the --multi-model cluster")
     ap.add_argument("--json", action="store_true")
     ap.add_argument("--bench-json", action="store_true",
                     help="merge this run's report into BENCH_serve.json")
@@ -299,6 +457,9 @@ def main(argv=None):
     if args.kernel_bench:
         out, speedup = run_kernel_bench(cfg, args)
         tag, key = "__kernel", "kernel"
+    elif args.multi_model:
+        out, speedup = run_multi_model(args)
+        tag, key = "__multi_model", "multi_model"
     else:
         params = P.init_tree(registry.decls(cfg), jax.random.key(args.seed))
         if args.shared_prefix:

@@ -25,6 +25,12 @@ The second half of the module is the serving engine's durability layer,
   is an optimisation only and must never change the emitted tokens.
 * **In-flight records are never evicted** — ``evict`` refuses to drop a
   record whose request has not completed (that would lose replay state).
+
+A multi-model cluster keeps one :class:`ClusterJournal`: a per-engine
+:class:`RequestJournal` under each engine name, so every engine's replay
+determinism is checked independently (sequence numbers and divergence
+cross-checks never mix across models) while the cluster still has a
+single durable root to enumerate in-flight work from.
 """
 
 from __future__ import annotations
@@ -287,3 +293,40 @@ class RequestJournal:
     def completed(self) -> list[SlotRecord]:
         return sorted((r for r in self._records.values() if r.completed),
                       key=lambda r: r.arrival_seq)
+
+
+class ClusterJournal:
+    """One durable root over per-engine :class:`RequestJournal` instances.
+
+    Each engine of a :class:`~repro.serve.cluster.ServeCluster` journals
+    into its own ``RequestJournal`` (obtained via :meth:`journal`), keeping
+    FIFO sequence numbers and replay cross-checks engine-local — a replay
+    of model A must never be validated against model B's tokens. The
+    cluster-level views (:meth:`incomplete` / :meth:`completed`) aggregate
+    per engine name, which is what a coordinator restarts from after a
+    cluster-wide preemption.
+    """
+
+    def __init__(self):
+        self._journals: dict[str, RequestJournal] = {}
+
+    def journal(self, engine: str) -> RequestJournal:
+        """The (created-on-first-use) journal for ``engine``."""
+        if engine not in self._journals:
+            self._journals[engine] = RequestJournal()
+        return self._journals[engine]
+
+    def engines(self) -> list[str]:
+        """Engine names with a journal, in registration order."""
+        return list(self._journals)
+
+    def incomplete(self) -> dict[str, list[SlotRecord]]:
+        """Engine name -> in-flight records (each list oldest-first) —
+        the cluster-wide replay set after a preemption."""
+        return {name: j.incomplete() for name, j in self._journals.items()
+                if j.incomplete()}
+
+    def completed(self) -> dict[str, list[SlotRecord]]:
+        """Engine name -> completed records, per-engine arrival order."""
+        return {name: j.completed() for name, j in self._journals.items()
+                if j.completed()}

@@ -1,0 +1,338 @@
+"""Multi-model serving cluster: N engines, one pool, one power budget.
+
+This is the serving rendition of the paper's HEEPocrates example — several
+heterogeneous compute units (there: CGRA, IMC, crypto accelerators; here:
+per-model :class:`~repro.serve.engine.ContinuousBatchingEngine` instances)
+running concurrently against **one** bus/memory pool (here: one
+:class:`~repro.serve.paged.PagePool` + one
+:class:`~repro.serve.pages.PageTable`) and **one** power manager budget
+(here: a :class:`PowerBudget` over the shared
+:class:`~repro.core.power.PowerManager`). The cluster owns allocation; the
+engines are tenants.
+
+What the :class:`ServeCluster` arbitrates:
+
+* **Admission (weighted round-robin).** Every cluster step opens a round
+  of per-engine admission grants equal to each tenant's ``weight``
+  (default: its slot count, i.e. unthrottled); an engine that spent its
+  grants waits for the next round, so a down-weighted tenant's burst
+  admits at a bounded rate instead of starving its peers' share of the
+  power/pool budget. Engine order rotates per step so ties break fairly.
+* **Power-budget backpressure.** Before an engine admits into a slot, the
+  cluster checks whether waking that slot's memory bank would exceed the
+  :class:`PowerBudget`. If it would, the admission *stalls* (the request
+  stays at the queue head, FIFO intact) instead of exceeding the budget —
+  the scheduling analogue of X-HEEP refusing to power up a domain the
+  envelope cannot carry. Slots whose bank is already awake ride for free
+  (banks are refcount-shared across engines).
+* **Fair cross-tenant reclaim.** When the shared pool runs dry, the
+  cluster evicts unpinned prefix residency LRU-first from the *namespace
+  holding the most evictable pages*, instead of wiping every tenant's
+  warm cache at once. (Unlike an engine-private table, the cluster table
+  is not platform-wired: resident pages do not hold banks awake, so a
+  warm cache can never carry the platform past the power budget — the
+  budget governs slot-driven wakes only.)
+* **Prefix sharing across engines.** Engines serving the same model (same
+  config + weights) declare the same ``namespace`` and alias each other's
+  published prefix pages — pool ids are globally valid, so adoption is
+  block-table pointing even across engines. Different namespaces never
+  alias (same token ids under different weights are different states).
+
+Invariants (held by ``tests/test_cluster.py``):
+
+* **Per-engine bit-identity.** A request's tokens are identical whether
+  its engine runs alone or as a cluster tenant — sharing, stalls, and
+  reclaim are scheduling/memory effects only, never numerical ones.
+* **The budget is never exceeded.** Admissions stall rather than wake a
+  bank past the budget; a budget so tight that no progress is possible
+  raises loudly instead of spinning.
+* **Preempt/replay stays per-engine deterministic.** ``preempt()``
+  flushes and requeues every tenant; each engine's journal cross-checks
+  its own replay tokens (the :class:`~repro.runtime.ft.ClusterJournal`
+  keeps them separate).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core.power import PowerState
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.runtime.ft import ClusterJournal
+from repro.serve.engine import ContinuousBatchingEngine, Request
+from repro.serve.paged import PagePool, pool_signature
+from repro.serve.pages import PageTable
+
+__all__ = ["PowerBudget", "ServeCluster", "awake_banks"]
+
+
+def awake_banks(platform) -> int:
+    """Bank domains currently ``ON`` — the one predicate both the budget
+    enforcement and the cluster's introspection count with (a single
+    definition keeps the enforced and the reported quantity identical)."""
+    return sum(1 for name, state in platform.power.states.items()
+               if name.startswith("bank") and state is PowerState.ON)
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerBudget:
+    """Envelope the cluster must stay inside when waking memory banks.
+
+    ``max_awake_banks`` caps the number of bank domains in the ``ON``
+    state at once (the paper's power-gating view: only so many domains may
+    be powered). ``budget_uw`` caps the platform's total µW at
+    ``freq_mhz`` instead (meaningful when the platform's domains carry
+    real leakage/dynamic coefficients). Either or both may be set; a bank
+    that is already awake never re-charges the budget.
+    """
+
+    max_awake_banks: int | None = None
+    budget_uw: float | None = None
+    freq_mhz: float = 100.0
+
+    def __post_init__(self):
+        if self.max_awake_banks is None and self.budget_uw is None:
+            raise ValueError("budget needs max_awake_banks or budget_uw")
+        if self.max_awake_banks is not None and self.max_awake_banks < 1:
+            raise ValueError("max_awake_banks must be >= 1 (0 can never "
+                             "admit anything)")
+
+    def would_exceed(self, platform, bank: str) -> bool:
+        """True when waking ``bank`` (if it is not already ``ON``) would
+        push the platform past this budget. Pure query — no state is
+        touched."""
+        power = platform.power
+        if power.state(bank) is PowerState.ON:
+            return False
+        if self.max_awake_banks is not None:
+            if awake_banks(platform) + 1 > self.max_awake_banks:
+                return True
+        if self.budget_uw is not None:
+            dom = power.domains[bank]
+            now = power.power_uw(self.freq_mhz)
+            delta = (dom.power_uw(PowerState.ON, 0.0, self.freq_mhz)
+                     - dom.power_uw(power.state(bank), 0.0, self.freq_mhz))
+            if now + delta > self.budget_uw:
+                return True
+        return False
+
+
+class ServeCluster:
+    """N continuous-batching engines over one pool, table, and platform.
+
+    The cluster owns the shared resources (``pool_pages`` KV pages of
+    ``page_size`` tokens, one prefix :class:`PageTable`, one
+    :class:`~repro.core.platform.Platform`) and constructs its tenant
+    engines via :meth:`add_engine` — engines never allocate for
+    themselves. :meth:`step` advances every tenant once on the shared
+    clock; admission inside each engine step is arbitrated by the
+    cluster's weighted-round-robin grants and the optional
+    :class:`PowerBudget`.
+    """
+
+    def __init__(self, *, pool_pages: int, page_size: int = 16,
+                 platform=None, clock: Callable[[], float] = lambda: 0.0,
+                 capacity_pages: int | None = None,
+                 power_budget: PowerBudget | None = None,
+                 journal: ClusterJournal | None = None):
+        from repro.core.platform import Platform, XHeepConfig
+
+        owns_platform = platform is None
+        self.platform = platform or Platform(XHeepConfig())
+        self.clock = clock
+        self.budget = power_budget
+        self.pool = PagePool(pool_pages, page_size)
+        # deliberately NOT platform-wired: an engine-private table holds
+        # its resident pages' banks awake (the SRAM-retention analogue),
+        # but here bank wakes are governed by the admission-time power
+        # budget, and residency waking banks behind the budget's back
+        # would let warm caches exceed the envelope. Cluster residency is
+        # power-free; the budget caps compute-driven (slot) wakes only.
+        self.table = PageTable(
+            page_size,
+            capacity_pages=(capacity_pages if capacity_pages is not None
+                            else pool_pages),
+            on_evict=self.pool.release)
+        self.journal = journal or ClusterJournal()
+        self.engines: dict[str, ContinuousBatchingEngine] = {}
+        self._weights: dict[str, int] = {}
+        self._grants: dict[str, int] = {}
+        self._ns_identity: dict[str, tuple] = {}
+        self._rr_offset = 0
+        self.steps = 0
+        self.power_stalls = 0          # admissions stalled by the budget
+        self.wrr_stalls = 0            # admissions deferred to the next round
+        self.reclaims: dict[str, int] = {}   # namespace -> pages reclaimed
+        if owns_platform:
+            # our own platform: the idle bank pool starts gated (same rule
+            # the engine applies when it owns its platform)
+            for i in range(self.platform.config.n_banks):
+                self.platform.power.clock_gate(f"bank{i}")
+
+    # -- tenancy ---------------------------------------------------------------
+
+    def add_engine(self, cfg: ModelConfig, params, *, name: str, slots: int,
+                   max_len: int, namespace: str | None = None,
+                   weight: int | None = None,
+                   **engine_kwargs) -> ContinuousBatchingEngine:
+        """Construct a tenant engine on the cluster's shared resources.
+
+        ``namespace`` defaults to ``cfg.name``; engines may share one
+        namespace **only** when they serve the same model — same config
+        *and* the **same parameter tree object** — because namespace peers
+        alias each other's prefix pages bitwise. Replicas must be handed
+        one shared params tree (load the checkpoint once, pass it to every
+        replica): identity is checked by object, since shape-equal trees
+        with different weights would silently corrupt aliased pages, and
+        sharing the host copy is the memory-sane layout anyway. ``weight``
+        is the engine's admission grants per scheduling round; the default
+        (``slots``) lets a tenant fill every free slot each round, exactly
+        like an isolated engine — lower it to pace a tenant's admissions
+        relative to its peers.
+        """
+        if name in self.engines:
+            raise ValueError(f"duplicate engine name {name!r}")
+        if not registry.supports_paged(cfg):
+            raise ValueError(
+                f"{cfg.name} ({cfg.family}) cannot join the cluster: the "
+                "shared pool/table requires the paged backend")
+        if weight is None:
+            weight = slots
+        if weight < 1:
+            raise ValueError("weight must be >= 1")
+        ns = cfg.name if namespace is None else namespace
+        identity = (pool_signature(cfg), cfg, id(params))
+        prior = self._ns_identity.get(ns)
+        if prior is not None and prior != identity:
+            raise ValueError(
+                f"namespace {ns!r} already serves a different model: "
+                "namespace peers alias each other's prefix pages, so they "
+                "must share config and weights exactly")
+        self._ns_identity[ns] = identity
+        eng = ContinuousBatchingEngine(
+            cfg, params, slots=slots, max_len=max_len,
+            platform=self.platform, clock=self.clock,
+            journal=self.journal.journal(name),
+            pool=self.pool, page_table=self.table,
+            namespace=ns, name=name,
+            admission_hook=self._admission_hook,
+            reclaim=self._reclaim,
+            **engine_kwargs)
+        self.engines[name] = eng
+        self._weights[name] = weight
+        return eng
+
+    def submit(self, name: str, request: Request) -> bool:
+        """Enqueue ``request`` on engine ``name`` (engine backpressure
+        applies: False = rejected and counted there)."""
+        return self.engines[name].submit(request)
+
+    # -- arbitration -----------------------------------------------------------
+
+    def _admission_hook(self, eng, slot_idx: int, request) -> bool | None:
+        """Per-admission veto, called from inside each engine's step: spend
+        one WRR grant and check the power budget for the slot's bank.
+        Returns True to admit, False to skip this slot (power vetoes are
+        per-slot — another slot's bank may already be awake), or None to
+        end the engine's admission scan (a spent grant is engine-global)."""
+        if self._grants.get(eng.name, 0) <= 0:
+            self.wrr_stalls += 1
+            return None
+        bank = eng._slot_bank[slot_idx]
+        if self.budget is not None and self.budget.would_exceed(
+                self.platform, bank):
+            self.power_stalls += 1
+            return False
+        self._grants[eng.name] -= 1
+        return True
+
+    def _reclaim(self, eng) -> None:
+        """Pool pressure: evict unpinned prefix residency, LRU within the
+        namespace currently holding the most evictable pages (fair across
+        tenants — the heaviest idle footprint pays first). One page per
+        iteration is deliberate: eviction stops the moment a pool page
+        actually frees, so the warm cache loses the minimum — the rescan
+        per evicted page is the price of that minimality, fine at this
+        pool's scale."""
+        while not self.pool.free_count:
+            evictable = self.table.unpinned_by_ns()
+            if not evictable:
+                return                 # nothing reclaimable: alloc will raise
+            ns = max(sorted(evictable), key=lambda n: evictable[n])
+            if not self.table.evict_lru(1, ns=ns):
+                return
+            self.reclaims[ns] = self.reclaims.get(ns, 0) + 1
+
+    # -- the cluster step ------------------------------------------------------
+
+    @property
+    def busy(self) -> bool:
+        """True while any tenant has queued or in-flight work."""
+        return any(e.busy for e in self.engines.values())
+
+    def step(self) -> bool:
+        """One scheduling round: refill every tenant's admission grants,
+        then advance each engine one step (order rotates per round).
+        Returns False when every tenant is idle; raises when queued work
+        exists but the power budget lets nothing run (a budget deadlock —
+        stalling forever would spin silently)."""
+        self._grants = dict(self._weights)
+        names = list(self.engines)
+        if names:
+            off = self._rr_offset % len(names)
+            names = names[off:] + names[:off]
+            self._rr_offset += 1
+        launched = False
+        for name in names:
+            launched |= self.engines[name].step()
+        if launched:
+            self.steps += 1
+        elif self.busy:
+            raise RuntimeError(
+                "cluster stalled: queued work but no engine can run — the "
+                "power budget admits nothing (budget deadlock)")
+        return launched
+
+    def run_until_idle(self, max_steps: int = 100_000) -> None:
+        """Step until every tenant drains (raises after ``max_steps``)."""
+        for _ in range(max_steps):
+            if not self.step():
+                return
+        raise RuntimeError(f"cluster still busy after {max_steps} steps")
+
+    # -- preemption ------------------------------------------------------------
+
+    def preempt(self) -> dict[str, list[Request]]:
+        """Preempt every tenant: in-flight work is requeued FIFO per
+        engine. Replay is bit-identical per engine (each engine's journal
+        cross-checks its own tokens on the way back)."""
+        return {name: eng.preempt() for name, eng in self.engines.items()}
+
+    # -- introspection ---------------------------------------------------------
+
+    def awake_banks(self) -> int:
+        """Bank domains currently ``ON`` — what the budget caps."""
+        return awake_banks(self.platform)
+
+    def stats(self) -> dict:
+        """Cluster counters plus every tenant's ``engine.stats()`` (one
+        source of truth: the pool/table numbers inside each tenant's entry
+        describe the same shared objects)."""
+        return {
+            "steps": self.steps,
+            "power_stalls": self.power_stalls,
+            "wrr_stalls": self.wrr_stalls,
+            "reclaims": dict(self.reclaims),
+            "awake_banks": self.awake_banks(),
+            "pool": dict(self.pool.stats, pages=self.pool.n_pages,
+                         in_use=self.pool.in_use, free=self.pool.free_count,
+                         by_owner={str(k): v
+                                   for k, v in self.pool.owners().items()}),
+            "table": dict(self.table.stats, resident=self.table.resident,
+                          pinned=self.table.pinned,
+                          by_namespace=self.table.resident_by_ns()),
+            "engines": {name: eng.stats()
+                        for name, eng in self.engines.items()},
+        }

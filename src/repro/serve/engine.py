@@ -29,9 +29,21 @@ Two device backends serve the slots:
   prefills dedup — the later one stalls on the earlier one's claim, then
   adopts its published pages (mid-flight re-match).
 * **lanes** (SSM/hybrid/MoE/sliding-window configs, and engines sharing an
-  external page table) — the PR 2 layout: one full-length cache lane per
-  slot (``vmap`` over batch-1 decode), snapshot pages, copy-on-write at the
-  slot's first step.
+  external page table *without* a shared pool) — the PR 2 layout: one
+  full-length cache lane per slot (``vmap`` over batch-1 decode), snapshot
+  pages, copy-on-write at the slot's first step.
+
+Since PR 4 the engine no longer has to own its allocation: pass ``pool``
+(a cluster-owned :class:`~repro.serve.paged.PagePool`) plus a shared
+``page_table`` and the engine becomes one tenant of a multi-model
+:class:`~repro.serve.cluster.ServeCluster` — page-table payloads are then
+globally valid pool ids, so a shared table no longer forces the lane
+backend. ``namespace`` keys the engine's prefix pages (same model + same
+weights = same namespace = cross-engine prefix aliasing; different models
+stay isolated), ``admission_hook`` lets a scheduler veto each admission
+(weighted round-robin grants, power-budget backpressure), and ``reclaim``
+replaces the engine's own ``pages.clear()`` under pool pressure with the
+cluster's fair cross-tenant eviction.
 
 Dispatch is optionally **async double-buffered** (``async_dispatch=True``):
 step N+1 launches before step N's argmax is transferred — decoding lanes
@@ -311,7 +323,12 @@ class ContinuousBatchingEngine:
                  paged: bool | None = None,
                  async_dispatch: bool = False,
                  lane_batch: int | None = None,
-                 device_len: int | None = None):
+                 device_len: int | None = None,
+                 pool: PagePool | None = None,
+                 namespace: str = "",
+                 name: str | None = None,
+                 admission_hook=None,
+                 reclaim=None):
         from repro.core.platform import Platform, XHeepConfig
 
         if slots < 1:
@@ -332,37 +349,60 @@ class ContinuousBatchingEngine:
         self.pad_token = pad_token
         self.prefill_chunk = prefill_chunk
         self.async_dispatch = async_dispatch
+        self.namespace = namespace
+        self.name = name if name is not None else (namespace or "engine")
+        # scheduler callbacks (set by a ServeCluster): ``admission_hook``
+        # vetoes each admission, ``reclaim`` replaces pages.clear() under
+        # pool pressure with a cross-tenant policy
+        self._admission_hook = admission_hook
+        self._reclaim = reclaim
         # device-shape canonicalisation: lanes/cache positions may be padded
         # beyond the scheduling shape so engines of different sizes share one
         # compiled step (extra lanes ride idle; extra positions are masked)
         self.n_lanes = max(slots, lane_batch or 0)
         self.device_len = max(max_len, device_len or 0)
 
-        # backend: a global page pool needs family support and an
-        # engine-private table (an external shared table holds snapshot
-        # payloads from other engines — lane territory)
-        can_page = registry.supports_paged(cfg) and page_table is None
+        # backend: a global page pool needs family support; an external
+        # shared table is paged territory only when its payloads are
+        # globally valid pool ids, i.e. the pool is shared (cluster-owned)
+        # too — otherwise the table holds other engines' snapshots and the
+        # lane backend takes over
+        if pool is not None and not registry.supports_paged(cfg):
+            raise ValueError(
+                f"{cfg.name} ({cfg.family}) cannot join a shared page pool: "
+                "no paged KV decode for this family")
+        can_page = registry.supports_paged(cfg) and (
+            page_table is None or pool is not None)
         if paged is None:
             paged = can_page
         elif paged and not can_page:
             raise ValueError(
                 "paged backend needs a transformer-family config without "
-                "MoE/sliding-window and an engine-private page table")
+                "MoE/sliding-window and either an engine-private page table "
+                "or a shared (cluster-owned) pool")
+        if pool is not None and not paged:
+            raise ValueError("a shared pool is a paged-backend resource; "
+                             "drop it or drop paged=False")
         self.paged = paged
 
         # pass `page_table` to share one prefix store across engines (same
-        # cfg/max_len), or just `page_size` for an engine-private table.
-        # The private table is always bounded; build a
-        # PageTable(capacity_pages=None) yourself if you really want
-        # unbounded residency.
-        self._ps = page_size or 16
+        # cfg/max_len — plus a shared `pool` to stay on the paged backend),
+        # or just `page_size` for an engine-private table. The private
+        # table is always bounded; build a PageTable(capacity_pages=None)
+        # yourself if you really want unbounded residency.
+        self._ps = (pool.page_size if pool is not None else page_size) or 16
         self._np_max = -(-self.device_len // self._ps)
         cap = 0
-        self._pool: PagePool | None = None
+        self.owns_pool = pool is None
+        self._pool: PagePool | None = pool
+        self._arena = None
         if self.paged:
-            if page_size:
-                cap = page_capacity if page_capacity is not None else 16 * slots
-            self._pool = PagePool(cfg, slots * self._np_max + cap, self._ps)
+            if self._pool is None:
+                if page_size:
+                    cap = (page_capacity if page_capacity is not None
+                           else 16 * slots)
+                self._pool = PagePool(slots * self._np_max + cap, self._ps)
+            self._arena = self._pool.arena(cfg)
         if page_table is not None:
             self.pages: PageTable | None = page_table
         elif page_size:
@@ -374,6 +414,12 @@ class ContinuousBatchingEngine:
                 on_evict=(self._pool.release if self.paged else None))
         else:
             self.pages = None
+        if (self.paged and self.pages is not None
+                and self.pages.page_size != self._ps):
+            raise ValueError(
+                f"page table page_size {self.pages.page_size} != pool page "
+                f"size {self._ps}: paged payloads are pool pages, the two "
+                "extents must coincide")
 
         self.queue: collections.deque[Request] = collections.deque()
         self._ids: set[str] = set()            # every id ever submitted
@@ -390,6 +436,7 @@ class ContinuousBatchingEngine:
         self.prompt_tokens_processed = 0
         self.prompt_tokens_reused = 0
         self.stalls = 0                        # lane-steps waiting on a sibling
+        self.admission_stalls = 0              # admissions vetoed by the hook
         self.rematches = 0                     # mid-flight prefix adoptions
         self.rematched_tokens = 0              # prompt tokens adopted mid-flight
         self.completed: list[Request] = []
@@ -453,43 +500,68 @@ class ContinuousBatchingEngine:
         return True
 
     def _admit(self) -> None:
-        for i in range(self.n_slots):
-            if not self.queue:
-                break
-            if self.slots[i] is not None:
-                continue
+        free = [i for i in range(self.n_slots) if self.slots[i] is None]
+        while self.queue and free:
+            i = self._place(free)
+            if i is None:
+                break        # head unplaceable: FIFO forbids skipping it
+            free.remove(i)
             req = self.queue.popleft()              # FIFO — fairness invariant
-            match = (self.pages.acquire(req.prompt)
-                     if self.pages is not None else None)
-            if not self.paged and match is None and i in self._dirty:
-                self._cache = self._reset_fn(self._cache, i,
-                                             self._page_template)
-                self._dirty.discard(i)
-            rec = self.journal.open(req.id, req.prompt, req.max_new_tokens)
-            req.tokens = []
-            req.admit_time = self.clock()
-            slot = _Slot(request=req, seq=rec.arrival_seq)
-            if match is not None:
-                # shared prefix admitted pre-consumed. Paged backend: pure
-                # block-table pointing — the chain's pool pages are pinned
-                # in place, no state is copied, ever. Lane backend: the lane
-                # copy is deferred to the first step (copy-on-write), so a
-                # slot preempted before it runs never pays for the copy.
-                slot.fed = match.tokens_matched
-                slot.page_keys = match.keys
-                if self.paged:
-                    for idx in match.chain:
-                        self._pool.retain(idx)
-                    slot.block_pages = list(match.chain)
-                else:
-                    slot.pending_snapshot = match.snapshot
-                self.prompt_tokens_reused += match.tokens_matched
-            slot.next_token = req.prompt[slot.fed]
-            self.journal.note_prefix(req.id, slot.fed, slot.page_keys)
-            self.slots[i] = slot
-            # shared refcount wakes the bank if idle
-            self.platform.bank_acquire(self._slot_bank[i])
-            self.platform.interrupts.fire(ADMIT_LINE, req)
+            self._admit_into(i, req)
+
+    def _place(self, free: list[int]) -> int | None:
+        """First free slot the scheduler lets the queue head into (None =
+        stalled this step). The hook peeks, never pops: a veto leaves the
+        request at the queue head so FIFO order survives the stall. A
+        veto's scope is the hook's call: False is per-slot (a later free
+        slot may sit on an already-awake bank and admit the same head at
+        zero budget cost — and the vetoed slot stays available to the next
+        head); None is engine-global (no grant will appear mid-step)."""
+        if self._admission_hook is None:
+            return free[0]
+        for i in free:
+            verdict = self._admission_hook(self, i, self.queue[0])
+            if verdict:
+                return i
+            self.admission_stalls += 1
+            if verdict is None:
+                return None
+        return None
+
+    def _admit_into(self, i: int, req: Request) -> None:
+        """Bind ``req`` to free slot ``i``: page-table acquisition, journal
+        open, bank wake, admit interrupt."""
+        match = (self.pages.acquire(req.prompt, self.namespace)
+                 if self.pages is not None else None)
+        if not self.paged and match is None and i in self._dirty:
+            self._cache = self._reset_fn(self._cache, i,
+                                         self._page_template)
+            self._dirty.discard(i)
+        rec = self.journal.open(req.id, req.prompt, req.max_new_tokens)
+        req.tokens = []
+        req.admit_time = self.clock()
+        slot = _Slot(request=req, seq=rec.arrival_seq)
+        if match is not None:
+            # shared prefix admitted pre-consumed. Paged backend: pure
+            # block-table pointing — the chain's pool pages are pinned
+            # in place, no state is copied, ever. Lane backend: the lane
+            # copy is deferred to the first step (copy-on-write), so a
+            # slot preempted before it runs never pays for the copy.
+            slot.fed = match.tokens_matched
+            slot.page_keys = match.keys
+            if self.paged:
+                for idx in match.chain:
+                    self._pool.retain(idx)
+                slot.block_pages = list(match.chain)
+            else:
+                slot.pending_snapshot = match.snapshot
+            self.prompt_tokens_reused += match.tokens_matched
+        slot.next_token = req.prompt[slot.fed]
+        self.journal.note_prefix(req.id, slot.fed, slot.page_keys)
+        self.slots[i] = slot
+        # shared refcount wakes the bank if idle
+        self.platform.bank_acquire(self._slot_bank[i])
+        self.platform.interrupts.fire(ADMIT_LINE, req)
 
     # -- the engine step ------------------------------------------------------
 
@@ -606,15 +678,16 @@ class ContinuousBatchingEngine:
                 else self._zero_prev)
         fb = jnp.asarray(feedback)
         if self.paged:
+            arena = self._arena
             tables, lengths = self._build_tables()
             if chunk == 1 or int(counts.max()) <= 1:
-                nxt, self._pool.k, self._pool.v = self._pstep(
-                    self.params, self._pool.k, self._pool.v, tables, lengths,
+                nxt, arena.k, arena.v = self._pstep(
+                    self.params, arena.k, arena.v, tables, lengths,
                     jnp.asarray(toks[:, 0]), fb, prev,
                     jnp.asarray(counts > 0))
             else:
-                nxt, self._pool.k, self._pool.v = self._pchunk(
-                    self.params, self._pool.k, self._pool.v, tables, lengths,
+                nxt, arena.k, arena.v = self._pchunk(
+                    self.params, arena.k, arena.v, tables, lengths,
                     jnp.asarray(toks), jnp.asarray(counts), fb, prev)
             return nxt
         self._apply_pending_snapshots()
@@ -671,9 +744,12 @@ class ContinuousBatchingEngine:
         """Grow the slot's block table to cover positions [0, target)."""
         need = -(-target // self._ps)
         while len(slot.block_pages) < need:
-            if not self._pool.free_count and self.pages is not None:
-                self.pages.clear()     # recycle unpinned shared residency
-            slot.block_pages.append(self._pool.alloc())
+            if not self._pool.free_count:
+                if self._reclaim is not None:
+                    self._reclaim(self)    # cluster: fair cross-tenant evict
+                elif self.pages is not None:
+                    self.pages.clear()     # recycle unpinned shared residency
+            slot.block_pages.append(self._pool.alloc(self.name))
 
     def _try_rematch(self, slot: _Slot) -> None:
         """Mid-flight prefix re-match: adopt a sibling's freshly published
@@ -682,11 +758,12 @@ class ContinuousBatchingEngine:
         adopted range is released (its positions hold the same values the
         shared page does, since both ran the same prompt prefix)."""
         prompt = slot.request.prompt
-        m = self.pages.lookup(prompt)
+        m = self.pages.lookup(prompt, self.namespace)
         if m <= slot.fed:
             return
         ps = self.pages.page_size
-        ext = self.pages.acquire_range(prompt, slot.fed // ps, m // ps)
+        ext = self.pages.acquire_range(prompt, slot.fed // ps, m // ps,
+                                       self.namespace)
         if not ext:
             return
         adopted = m - slot.fed
@@ -718,7 +795,7 @@ class ContinuousBatchingEngine:
         if boundary > len(prompt) - 1:
             return False                   # tail extent: never publishable
         key = prompt[:boundary]
-        if key in self.pages:
+        if self.pages.has(key, self.namespace):
             return False                   # resident: re-match handles it
         claimant = self._claims.get(key)
         if claimant is not None and claimant is not slot:
@@ -764,16 +841,16 @@ class ContinuousBatchingEngine:
             return
         key = slot.request.prompt[:fed]
         self._claims.pop(key, None)        # computed: the claim is moot
-        if not self.pages.wants(key):
+        if not self.pages.wants(key, self.namespace):
             return
         if self.paged:
             idx = slot.block_pages[fed // self.pages.page_size - 1]
             self._pool.retain(idx)         # residency reference
-            if not self.pages.publish(key, idx):
+            if not self.pages.publish(key, idx, self.namespace):
                 self._pool.release(idx)
         else:
             snapshot = jax.tree.map(lambda x: x[i], self._cache)
-            self.pages.publish(key, snapshot)
+            self.pages.publish(key, snapshot, self.namespace)
 
     def _evict(self, i: int) -> None:
         slot = self.slots[i]
@@ -781,7 +858,7 @@ class ContinuousBatchingEngine:
             if slot.page_keys:
                 # refcount release — pinned pages outlive the slot only
                 # through the table's own residency, never through this pin
-                self.pages.release(slot.page_keys)
+                self.pages.release(slot.page_keys, self.namespace)
                 slot.page_keys = ()
             slot.pending_snapshot = None
             if self.paged:
@@ -854,9 +931,43 @@ class ContinuousBatchingEngine:
             self._ids.discard(req.id)
         return done
 
+    def occupancy(self) -> dict:
+        """Point-in-time load for a scheduler to arbitrate on: slot and
+        queue occupancy plus this engine's slice of the (possibly shared)
+        page pool. One source of truth — :meth:`stats` embeds the same
+        numbers for benchmarks."""
+        out = {
+            "slots": self.n_slots,
+            "active": self.active,
+            "slots_free": self.n_slots - self.active,
+            "queued": len(self.queue),
+        }
+        if self._pool is not None:
+            out.update(pool_free=self._pool.free_count,
+                       pool_in_use=self._pool.in_use,
+                       pool_pages_held=self._pool.in_use_by(self.name))
+        return out
+
+    def step_cost(self) -> int:
+        """Tokens the next :meth:`step` would feed the device (decode lanes
+        at one each, prefilling lanes up to ``prefill_chunk``) — the
+        per-step cost signal a cluster scheduler weighs admissions with."""
+        cost = 0
+        for slot in self.slots:
+            if slot is None:
+                continue
+            if slot.prefilling:
+                cost += min(self.prefill_chunk,
+                            len(slot.request.prompt) - slot.fed)
+            else:
+                cost += 1
+        return cost
+
     def stats(self) -> dict:
         """Lifetime counters (monotone), plus page-table/pool stats when the
-        paged prefix cache is enabled."""
+        paged prefix cache is enabled. The ``pool`` entry reports occupancy
+        and free-list length — the cluster scheduler and the benchmarks
+        read the same numbers."""
         out = {
             "steps": self.steps,
             "tokens_generated": self.tokens_generated,
@@ -866,6 +977,7 @@ class ContinuousBatchingEngine:
             "backend": "paged" if self.paged else "lanes",
             "async_dispatch": self.async_dispatch,
             "stalls": self.stalls,
+            "admission_stalls": self.admission_stalls,
             "rematches": self.rematches,
             "rematched_tokens": self.rematched_tokens,
             "completed": len(self.completed),
@@ -880,5 +992,10 @@ class ContinuousBatchingEngine:
         if self._pool is not None:
             out["pool"] = dict(self._pool.stats,
                                pages=self._pool.n_pages,
-                               in_use=self._pool.in_use)
+                               in_use=self._pool.in_use,
+                               free=self._pool.free_count,
+                               occupancy=round(
+                                   self._pool.in_use / self._pool.n_pages, 4),
+                               held_by_engine=self._pool.in_use_by(self.name),
+                               shared=not self.owns_pool)
         return out

@@ -8,6 +8,16 @@ pointing (no copy-on-write lane materialisation), publishing a page is a
 host-side refcount bump (no device gather), and eviction returns page ids
 to a free list instead of resetting whole lanes.
 
+Since PR 4 the pool is a *cluster-ownable* resource: the allocator (free
+list, refcounts, per-tenant accounting) is model-agnostic and hands out
+**globally valid page ids** from one id space, while the device storage
+lives in per-cache-signature *arenas* created lazily by :meth:`PagePool.
+arena`. Engines serving the same model family/shape share one arena (so a
+page id published by one engine is directly readable by another — the
+basis of cross-engine prefix sharing), and engines of different shapes
+share only the id space and budget — the serving analogue of X-HEEP's
+heterogeneous compute units arbitrating one memory pool.
+
 Invariants:
 
 * **Pool refcounts never go negative.** Every page id handed out by
@@ -17,10 +27,14 @@ Invariants:
 * **A referenced page is never recycled.** A page returns to the free list
   only when its last holder (slot block table or page-table residency)
   releases it.
-* **The null page is write-never.** Row ``null`` pads unused block-table
-  entries; attention masks every position at or beyond a slot's length, so
-  its contents are unobservable — appends target it only via the
-  out-of-bounds drop trick for masked lanes, which writes nothing.
+* **The null page is write-never and release-never.** Row ``null`` pads
+  unused block-table entries; attention masks every position at or beyond
+  a slot's length, so its contents are unobservable — and the allocator
+  refuses to ``retain``/``release`` it (it is not a real page).
+* **One id space, many arenas.** ``alloc`` draws from a single free list
+  regardless of which arena the page's bytes will land in, so the pool is
+  one shared budget; per-tenant ``in_use_by`` accounting lets a scheduler
+  arbitrate it.
 
 The jitted step functions take *device feedback*: a decoding lane's input
 token can come straight from the previous step's on-device argmax
@@ -31,6 +45,9 @@ double-buffered dispatch.
 
 from __future__ import annotations
 
+import dataclasses
+from typing import Any
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -39,58 +56,106 @@ from jax import lax
 from repro.models import registry
 from repro.models.config import ModelConfig
 
-__all__ = ["PagePool", "paged_step_fn", "paged_chunk_fn"]
+__all__ = ["PagePool", "PoolArena", "pool_signature", "paged_step_fn",
+           "paged_chunk_fn"]
 
 # jitted paged kernels shared across engine instances (jax then caches
 # compilations per pool/table shape)
 _PAGED_FNS: dict = {}
 
 
-class PagePool:
-    """Fixed-size KV page pool with a free list and per-page refcounts.
+def pool_signature(cfg: ModelConfig) -> tuple:
+    """Cache-shape signature of a config: configs with equal signatures can
+    share one device arena (their KV pages are layout-compatible)."""
+    return (cfg.n_layers, cfg.n_kv_heads, cfg.resolved_head_dim)
 
-    Device state is a (k, v) pair shaped ``(L, n_pages + 1, page_size, Kh,
-    Dh)`` — the extra row is the null page (see module docstring). Host
-    state is the allocator: ``alloc()`` hands out a page id with one
-    reference; ``retain``/``release`` follow the shared-bank discipline.
+
+@dataclasses.dataclass
+class PoolArena:
+    """Device storage for one cache signature: a (k, v) pair shaped
+    ``(L, n_pages + 1, page_size, Kh, Dh)`` — the extra row is the null
+    page. Engines mutate ``k``/``v`` in place per step (donated buffers);
+    same-signature engines share one arena, so page contents written by one
+    engine are readable by every other through the shared id space."""
+
+    k: Any
+    v: Any
+
+
+class PagePool:
+    """Fixed-size KV page pool: free list, per-page refcounts, per-tenant
+    accounting, and lazily created per-signature device arenas.
+
+    Host state is the allocator: ``alloc()`` hands out a globally valid
+    page id with one reference; ``retain``/``release`` follow the
+    shared-bank discipline. Device state is reached via :meth:`arena` —
+    one (k, v) arena per distinct cache signature, created on first use,
+    all sharing the one id space (ids are valid rows in every arena).
     """
 
-    def __init__(self, cfg: ModelConfig, n_pages: int, page_size: int):
+    def __init__(self, n_pages: int, page_size: int):
         if n_pages < 1 or page_size < 1:
             raise ValueError("pool needs at least one page of one token")
-        self.cfg = cfg
         self.page_size = page_size
         self.n_pages = n_pages
         self.null = n_pages                    # sentinel row, never written
-        self.k, self.v = registry.paged_pool_init(cfg, n_pages + 1, page_size)
+        self._arenas: dict[tuple, PoolArena] = {}
         self._refs = np.zeros((n_pages,), np.int32)
         self._free = list(range(n_pages - 1, -1, -1))   # pop() -> 0, 1, 2, ...
+        self._owner: dict[int, str | None] = {}
+        self._by_owner: dict[str | None, int] = {}
         self.stats = {"allocated": 0, "freed": 0, "high_water": 0}
 
-    def alloc(self) -> int:
-        """Take a free page (one reference held by the caller)."""
+    def arena(self, cfg: ModelConfig) -> PoolArena:
+        """Device arena for ``cfg``'s cache signature (created on first
+        use). Same-signature configs get the *same* arena object."""
+        sig = pool_signature(cfg)
+        if sig not in self._arenas:
+            k, v = registry.paged_pool_init(cfg, self.n_pages + 1,
+                                            self.page_size)
+            self._arenas[sig] = PoolArena(k, v)
+        return self._arenas[sig]
+
+    def _check(self, idx: int) -> None:
+        if not 0 <= idx < self.n_pages:
+            raise ValueError(
+                f"page id {idx} out of range (the null sentinel "
+                f"{self.null} is not a refcounted page)")
+
+    def alloc(self, owner: str | None = None) -> int:
+        """Take a free page (one reference held by the caller). ``owner``
+        tags the page for per-tenant accounting until it is recycled."""
         if not self._free:
             raise RuntimeError(
                 f"page pool exhausted ({self.n_pages} pages, all referenced)")
         idx = self._free.pop()
         self._refs[idx] = 1
+        self._owner[idx] = owner
+        self._by_owner[owner] = self._by_owner.get(owner, 0) + 1
         self.stats["allocated"] += 1
         self.stats["high_water"] = max(self.stats["high_water"], self.in_use)
         return idx
 
     def retain(self, idx: int) -> None:
-        """Add a reference to a live page (block-table pin, residency, ...)."""
+        """Add a reference to a live page (block-table pin, residency, or a
+        cross-tenant adoption of a sibling engine's page)."""
+        self._check(idx)
         if self._refs[idx] <= 0:
             raise ValueError(f"page {idx} retained while free")
         self._refs[idx] += 1
 
     def release(self, idx: int) -> None:
         """Drop one reference; the last release recycles the page."""
+        self._check(idx)
         if self._refs[idx] <= 0:
             raise ValueError(f"page {idx} released more than retained")
         self._refs[idx] -= 1
         if self._refs[idx] == 0:
             self._free.append(idx)
+            owner = self._owner.pop(idx, None)
+            self._by_owner[owner] = self._by_owner.get(owner, 1) - 1
+            if not self._by_owner[owner]:
+                del self._by_owner[owner]
             self.stats["freed"] += 1
 
     @property
@@ -102,6 +167,28 @@ class PagePool:
     def free_count(self) -> int:
         """Pages available for allocation."""
         return len(self._free)
+
+    @property
+    def device_pages(self) -> int:
+        """Device pages actually materialised: every arena carries the full
+        id space (plus the null row), so this is arenas × (n_pages + 1) —
+        the number to quote when sizing real KV memory, as opposed to the
+        shared *id-space* size ``n_pages``."""
+        return len(self._arenas) * (self.n_pages + 1)
+
+    def in_use_by(self, owner: str | None) -> int:
+        """Live pages carrying ``owner``'s tag. This is **alloc-origin**
+        accounting: a page stays charged to the tenant that allocated it
+        until its final release recycles it, even while other tenants hold
+        adopted references — use it to see who *fills* the pool, and
+        :meth:`PageTable.resident_by_ns` to see who *keeps* residency (the
+        cluster's fair reclaim arbitrates on the latter)."""
+        return self._by_owner.get(owner, 0)
+
+    def owners(self) -> dict[str | None, int]:
+        """Tenant tag -> live page count (alloc-origin, see
+        :meth:`in_use_by`), for stats and debugging."""
+        return dict(self._by_owner)
 
     def refcounts(self) -> dict[int, int]:
         """Live page id -> reference count (for tests and debugging)."""

@@ -22,7 +22,9 @@ Trace generators: :func:`staggered_trace` (arrivals ``gap`` apart),
 :func:`shared_prefix_requests` (a multi-tenant workload where every
 request's prompt starts with the same prefix — the page-table reuse
 workload; with prefix sharing enabled only the first request prefills the
-shared pages).
+shared pages). For a multi-model cluster, tag each arrival with its
+target engine (:func:`tag_engine`) and drive the merged trace through
+:class:`ClusterSimulator` — several engines, one fake clock, one report.
 
 Invariants the harness preserves: no wall clock or randomness anywhere, so
 every report is exactly reproducible; same-time arrivals are delivered in
@@ -61,8 +63,12 @@ class FakeClock:
 
 @dataclasses.dataclass(frozen=True)
 class Arrival:
+    """One scripted arrival; ``engine`` routes it on a cluster trace
+    (single-engine simulations leave it ``None``)."""
+
     time: float
     request: Request
+    engine: str | None = None
 
 
 def staggered_trace(requests: Sequence[Request], start: float = 0.0,
@@ -74,6 +80,14 @@ def staggered_trace(requests: Sequence[Request], start: float = 0.0,
 def burst_trace(requests: Sequence[Request], at: float = 0.0) -> list[Arrival]:
     """Everything at once — the saturation workload."""
     return [Arrival(at, r) for r in requests]
+
+
+def tag_engine(trace: Sequence[Arrival], engine: str) -> list[Arrival]:
+    """Route every arrival of ``trace`` to cluster engine ``engine``.
+    Merge tagged traces (list concatenation) before handing them to
+    :class:`ClusterSimulator`; delivery is stable-sorted by time, so
+    same-time arrivals keep their merged order."""
+    return [Arrival(a.time, a.request, engine) for a in trace]
 
 
 def shared_prefix_requests(n: int, *, prefix_len: int = 64,
@@ -205,3 +219,88 @@ class Simulator:
                          tokens_generated=eng.tokens_generated - tokens0,
                          completed=list(eng.completed[done0:]),
                          rejected=eng.rejected - rejected0)
+
+
+@dataclasses.dataclass
+class ClusterSimReport:
+    """One cluster run: aggregate counters plus per-engine completions."""
+
+    elapsed: float                    # fake-clock span of the run
+    steps: int                        # cluster scheduling rounds
+    tokens_generated: int             # summed over every engine
+    completed: dict                   # engine name -> requests, finish order
+    rejected: int                     # summed engine backpressure rejections
+
+    @property
+    def throughput(self) -> float:
+        """Aggregate generated tokens per unit of fake time."""
+        return self.tokens_generated / self.elapsed if self.elapsed else 0.0
+
+
+class ClusterSimulator:
+    """Drive a :class:`~repro.serve.cluster.ServeCluster` from one merged,
+    engine-tagged arrival trace on one fake clock.
+
+    Cost model: the cluster's engines are modelled as concurrently running
+    accelerator tiles on one platform (the X-HEEP picture), so one cluster
+    step — every busy engine advancing one batched launch — charges
+    ``dispatch_time + step_time`` once. Cross-engine prefix reuse therefore
+    shows up as *fewer cluster steps* to drain the same trace, exactly like
+    within-engine reuse does for a single engine. The model is synchronous;
+    async engines still work but are charged the sync cost.
+    """
+
+    def __init__(self, cluster, trace: Sequence[Arrival], clock: FakeClock,
+                 *, step_time: float = 1.0, dispatch_time: float = 0.0):
+        if cluster.clock is not clock:
+            raise ValueError("cluster must share the simulator's clock")
+        if step_time < 0 or dispatch_time < 0:
+            raise ValueError("step/dispatch times cannot be negative")
+        for arr in trace:
+            if arr.engine is None:
+                raise ValueError(
+                    f"untagged arrival {arr.request.id!r}: cluster traces "
+                    "route by engine name (see tag_engine)")
+        self.cluster = cluster
+        self.clock = clock
+        self.step_time = step_time
+        self.dispatch_time = dispatch_time
+        self.pending = collections.deque(
+            sorted(trace, key=lambda a: a.time))
+        # stable sort keeps same-time arrivals in trace order (FIFO semantics)
+
+    def _deliver_due(self) -> None:
+        while self.pending and self.pending[0].time <= self.clock.t:
+            arr = self.pending.popleft()
+            arr.request.arrival_time = arr.time
+            self.cluster.submit(arr.engine, arr.request)
+
+    def run(self, max_steps: int = 1_000_000) -> ClusterSimReport:
+        """Deliver arrivals and step the cluster until the trace drains;
+        returns this run's deltas (a reused cluster never double-counts)."""
+        cl = self.cluster
+        t0 = self.clock.t
+        steps0 = cl.steps
+        tokens0 = {n: e.tokens_generated for n, e in cl.engines.items()}
+        done0 = {n: len(e.completed) for n, e in cl.engines.items()}
+        rejected0 = {n: e.rejected for n, e in cl.engines.items()}
+        for _ in range(max_steps):
+            self._deliver_due()
+            if cl.busy:
+                if cl.step():
+                    self.clock.advance(self.dispatch_time + self.step_time)
+            elif self.pending:
+                # idle: jump to the next arrival instead of spinning
+                self.clock.advance_to(self.pending[0].time)
+            else:
+                break
+        else:
+            raise RuntimeError(f"simulation did not drain in {max_steps} steps")
+        return ClusterSimReport(
+            elapsed=self.clock.t - t0, steps=cl.steps - steps0,
+            tokens_generated=sum(e.tokens_generated - tokens0[n]
+                                 for n, e in cl.engines.items()),
+            completed={n: list(e.completed[done0[n]:])
+                       for n, e in cl.engines.items()},
+            rejected=sum(e.rejected - rejected0[n]
+                         for n, e in cl.engines.items()))

@@ -13,16 +13,18 @@ import jax
 from repro import configs
 from repro.core.platform import Platform, XHeepConfig
 from repro.models import registry
+from repro.serve.cluster import PowerBudget, ServeCluster
 from repro.serve.engine import ContinuousBatchingEngine, Request
-from repro.serve.sim import (Arrival, FakeClock, SimReport, Simulator,
-                             burst_trace, shared_prefix_requests,
-                             staggered_trace)
+from repro.serve.sim import (Arrival, ClusterSimulator, FakeClock, SimReport,
+                             Simulator, burst_trace, shared_prefix_requests,
+                             staggered_trace, tag_engine)
 from repro.sharding import params as P
 
 __all__ = [
-    "Arrival", "FakeClock", "SimReport", "Simulator", "burst_trace",
-    "shared_prefix_requests", "staggered_trace", "Request", "make_engine",
-    "make_requests", "run_trace", "smoke_params",
+    "Arrival", "ClusterSimulator", "FakeClock", "PowerBudget", "ServeCluster",
+    "SimReport", "Simulator", "add_smoke_engine", "burst_trace",
+    "make_cluster", "shared_prefix_requests", "staggered_trace", "tag_engine",
+    "Request", "make_engine", "make_requests", "run_trace", "smoke_params",
 ]
 
 _PARAM_CACHE: dict[str, tuple] = {}
@@ -66,6 +68,30 @@ def make_engine(arch: str = "granite_3_2b", *, slots: int = 3,
                                    queue_capacity=queue_capacity,
                                    **engine_kwargs)
     return eng, clock
+
+
+def make_cluster(*, pool_pages: int = 48, page_size: int = 8,
+                 clock: FakeClock | None = None, **cluster_kwargs):
+    """A tiny multi-model cluster on a fake clock. Returns (cluster, clock).
+
+    One canonical pool shape (48 pages of 8 tokens) across the cluster
+    tests keeps every test on the same compiled paged step.
+    """
+    clock = clock or FakeClock()
+    cluster = ServeCluster(pool_pages=pool_pages, page_size=page_size,
+                           clock=clock, **cluster_kwargs)
+    return cluster, clock
+
+
+def add_smoke_engine(cluster: ServeCluster, arch: str = "granite_3_2b", *,
+                     name: str, namespace: str | None = None, slots: int = 2,
+                     max_len: int = 40, seed: int = 0, **engine_kwargs):
+    """Add a smoke-model tenant with the canonical padded device shapes."""
+    cfg, params = smoke_params(arch, seed)
+    engine_kwargs.setdefault("lane_batch", CANONICAL["lane_batch"])
+    engine_kwargs.setdefault("device_len", CANONICAL["device_len"])
+    return cluster.add_engine(cfg, params, name=name, namespace=namespace,
+                              slots=slots, max_len=max_len, **engine_kwargs)
 
 
 def make_requests(n: int, *, prompt_len: int = 3, new_tokens: int = 4,

@@ -442,6 +442,29 @@ def test_pool_refcounts_drain_to_free_list():
     assert pool.in_use == 0
 
 
+def test_stats_report_pool_occupancy_and_free_list():
+    """stats()["pool"] is the scheduler's source of truth: occupancy and
+    free-list length are present and consistent with the pool at every
+    step, and occupancy() mirrors the same numbers."""
+    eng, _ = make_engine(slots=2, max_len=40, page_size=8)
+    for r in shared_prefix_requests(3, prefix_len=16, tail_len=3,
+                                    new_tokens=4, id_prefix="st"):
+        eng.submit(r)
+    while eng.busy:
+        eng.step()
+        pool = eng.stats()["pool"]
+        assert pool["free"] + pool["in_use"] == pool["pages"]
+        assert pool["free"] == eng._pool.free_count
+        assert pool["occupancy"] == round(pool["in_use"] / pool["pages"], 4)
+        assert pool["held_by_engine"] <= pool["in_use"]
+        assert pool["shared"] is False           # engine-private pool
+        occ = eng.occupancy()
+        assert occ["pool_free"] == pool["free"]
+        assert occ["active"] + occ["slots_free"] == occ["slots"]
+        assert eng.step_cost() <= eng.active * eng.prefill_chunk
+    assert eng.stats()["admission_stalls"] == 0  # no scheduler attached
+
+
 def test_journal_detects_replay_divergence():
     """The determinism canary: a replay emitting a different token than the
     pre-preemption run must fail loudly, not silently diverge."""

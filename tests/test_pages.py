@@ -128,6 +128,85 @@ def test_clear_keeps_pinned_chains():
     t.release(m.keys)
 
 
+# -- namespaces: one table, several isolated models ----------------------------
+
+
+def test_namespaces_isolate_identical_token_keys():
+    """The same token prefix under two namespaces is two distinct pages:
+    the same tokens under different model weights are different states and
+    must never alias."""
+    t = PageTable(2)
+    t.publish((1, 2), "m0-state", ns="m0")
+    assert t.lookup((1, 2, 3), ns="m1") == 0           # no cross-ns match
+    assert t.acquire((1, 2, 3), ns="m1") is None
+    t.publish((1, 2), "m1-state", ns="m1")
+    assert t.resident == 2 and t.resident_by_ns() == {"m0": 1, "m1": 1}
+    m0 = t.acquire((1, 2, 3), ns="m0")
+    m1 = t.acquire((1, 2, 3), ns="m1")
+    assert m0.snapshot == "m0-state" and m1.snapshot == "m1-state"
+    assert t.has((1, 2), "m0") and not t.has((1, 2))   # default ns is ""
+    t.release(m0.keys, ns="m0")
+    t.release(m1.keys, ns="m1")
+    with pytest.raises(ValueError, match="released more"):
+        t.release(m0.keys, ns="m0")
+    assert t.refcounts(ns=None) == {("m0", (1, 2)): 0, ("m1", (1, 2)): 0}
+
+
+def test_evict_lru_is_namespace_scoped():
+    t = PageTable(2)
+    t.publish((1, 2), "a0", ns="a")
+    t.publish((3, 4), "a1", ns="a")
+    t.publish((1, 2), "b0", ns="b")
+    m = t.acquire((3, 4, 9), ns="a")          # pin a1
+    assert t.evict_lru(10, ns="a") == 1       # only the unpinned a-page
+    assert not t.has((1, 2), "a") and t.has((3, 4), "a")
+    assert t.has((1, 2), "b")                 # b untouched
+    assert t.unpinned_by_ns() == {"b": 1}
+    t.release(m.keys, ns="a")
+    assert t.evict_lru(10) == 2               # ns=None: everything unpinned
+    assert t.resident == 0
+
+
+def test_on_evict_fires_after_table_fully_disowns_page():
+    """The ordering contract: when on_evict runs, the page is out of the
+    table and its bank reference is already released — the callback's
+    pool release is the payload's final reference drop."""
+    platform = Platform(XHeepConfig(n_banks=1))
+    platform.power.clock_gate("bank0")
+    seen = []
+
+    def on_evict(payload):
+        # by now the table holds nothing: not resident, bank released
+        assert not t.has((1, 2))
+        assert platform.power.state("bank0") is PowerState.CLOCK_GATED
+        seen.append(payload)
+
+    t = PageTable(2, capacity_pages=1, platform=platform, on_evict=on_evict)
+    t.publish((1, 2), "payload-a")
+    t.publish((3, 4), "payload-b")            # capacity 1: evicts (1, 2)
+    assert seen == ["payload-a"]
+    assert t.has((3, 4))
+
+
+def test_on_evict_release_order_keeps_shared_pool_nonnegative():
+    """Cross-tenant eviction against a real PagePool: the residency
+    reference released inside on_evict is always the last one standing —
+    the pool never sees a negative or transient double-held count."""
+    from repro.serve.paged import PagePool
+
+    pool = PagePool(4, 2)
+    t = PageTable(2, capacity_pages=1, on_evict=pool.release)
+    for ns in ("a", "b"):
+        idx = pool.alloc(ns)                  # engine block-table reference
+        pool.retain(idx)                      # residency reference
+        t.publish((1, 2), idx, ns=ns)         # may evict the other tenant
+        pool.release(idx)                     # slot completes, block ref gone
+    # tenant a's page was evicted (capacity 1): its pool page fully drained
+    assert not t.has((1, 2), "a") and t.has((1, 2), "b")
+    assert pool.in_use == 1                   # only b's resident page lives
+    assert all(c == 1 for c in pool.refcounts().values())
+
+
 # -- engine integration: sharing is invisible in the outputs -------------------
 
 

@@ -26,8 +26,8 @@ sys.path.insert(0, str(REPO / "src"))
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _EXTERNAL = ("http://", "https://", "mailto:")
 
-SERVE_MODULES = ("repro.serve.engine", "repro.serve.paged",
-                 "repro.serve.pages", "repro.serve.sim")
+SERVE_MODULES = ("repro.serve.cluster", "repro.serve.engine",
+                 "repro.serve.paged", "repro.serve.pages", "repro.serve.sim")
 
 
 def _doc_files() -> list[pathlib.Path]:
