@@ -17,7 +17,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 BENCH_PASSTHRU = $(filter-out bench-serve,$(MAKECMDGOALS))
 
-.PHONY: test-fast test-all bench-serve bench-json docs-check
+.PHONY: test-fast test-all bench-serve bench-json bench-table docs-check
 
 # Fast tier compiles at XLA opt level 0: the suite is compile-bound (tiny
 # smoke models, hundreds of small programs) and every correctness assertion
@@ -36,9 +36,10 @@ bench-serve:
 		--new-tokens 8 $(BENCH_PASSTHRU) $(BENCH_ARGS)
 
 # BENCH_serve.json artifact: default trace + shared-prefix trace +
-# multi-model cluster trace + paged kernel microbench, merged into one
-# JSON tracked across PRs (every trace asserts bit-identical outputs
-# before its numbers are reported)
+# multi-model cluster trace + sliding-window trace + paged kernel
+# microbench, merged into one JSON tracked across PRs (every trace asserts
+# bit-identical outputs before its numbers are reported). `make
+# bench-table` then rewrites the README table from it.
 bench-json:
 	$(PY) benchmarks/serve_bench.py --requests 16 --slots 4 --gap 2.0 \
 		--new-tokens 8 --json --bench-json
@@ -46,7 +47,14 @@ bench-json:
 		--new-tokens 8 --shared-prefix --json --bench-json
 	$(PY) benchmarks/serve_bench.py --requests 16 --slots 4 --gap 2.0 \
 		--new-tokens 8 --multi-model --json --bench-json
+	$(PY) benchmarks/serve_bench.py --requests 16 --slots 4 --gap 2.0 \
+		--new-tokens 16 --sliding-window --json --bench-json
 	$(PY) benchmarks/serve_bench.py --slots 4 --kernel-bench --json --bench-json
+
+# regenerate the README benchmark table from the committed BENCH_serve.json
+# (docs-check fails when the two drift, so PRs stop hand-editing numbers)
+bench-table:
+	$(PY) tools/bench_table.py --write
 
 docs-check:
 	$(PY) tools/docs_check.py

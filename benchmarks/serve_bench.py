@@ -15,6 +15,13 @@ overlaps them (see :class:`repro.serve.sim.Simulator`). Modes:
   prefix; paged sharing (block-table adoption, mid-flight re-match, cold-
   prefill dedup) is compared against the same engine with sharing off and
   against the PR 2 sharing engine.
+* ``--sliding-window [W]`` — a sliding-window config on the paged backend
+  (ring block tables): the windowed paged engine vs the PR 2-style lane
+  ring cache on a trace whose requests run well past the window. Outputs
+  are asserted bit-identical (including the ring recycling), and the
+  report carries the memory story: table entries per slot
+  (``ceil(window/page_size) + 1`` vs the unwindowed ``ceil(max_len/
+  page_size)``), the pool pages provisioned, and pages recycled.
 * ``--kernel-bench`` — microbenchmark of the fused paged-attention Pallas
   kernel (interpret mode on CPU) against its pure-jax reference.
 * ``--multi-model`` — the PR 4 cluster workload: two models / three
@@ -26,8 +33,11 @@ overlaps them (see :class:`repro.serve.sim.Simulator`). Modes:
   reuse and the consolidated pool high-water vs the isolated pools.
 
 ``--json`` prints the report as JSON; ``--bench-json`` additionally merges
-it into ``BENCH_serve.json`` at the repo root (``make bench-json`` runs all
-three modes), so the perf trajectory is tracked across PRs.
+it into ``BENCH_serve.json`` at the repo root (``make bench-json`` runs
+every mode), so the perf trajectory is tracked across PRs —
+``tools/bench_table.py`` regenerates the README benchmark table from that
+file and ``tools/docs_check.py`` fails the build when quoted numbers go
+stale.
 
   PYTHONPATH=src python benchmarks/serve_bench.py --arch granite-3-2b \
       --requests 16 --slots 4 --gap 2.0 --new-tokens 8
@@ -38,6 +48,7 @@ three modes), so the perf trajectory is tracked across PRs.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import math
 import pathlib
@@ -350,6 +361,70 @@ def run_multi_model(args) -> tuple[dict, float]:
     return out, speedup
 
 
+def run_sliding_window(args) -> tuple[dict, float]:
+    """Sliding-window serving on the paged backend vs the lane ring cache.
+
+    The config is ``--arch``'s smoke model with ``sliding_window`` set to
+    the flag's value; prompts and generations run well past the window so
+    every slot recycles ring pages. Three engines on the same trace:
+    the windowed paged engine with async dispatch (the new path), the same
+    backend synchronous, and the lane ring cache (the fallback this PR
+    retires) — bit-identity asserted across all three before any number
+    is reported. The memory claim is structural: a windowed slot's block
+    table has ``ceil(window/page_size) + 1`` entries, so the engine
+    provisions O(window) pool pages per slot instead of O(max_len).
+    """
+    base = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    w = args.sliding_window
+    cfg = dataclasses.replace(base, name=f"{base.name}-swa{w}",
+                              sliding_window=w)
+    params = P.init_tree(registry.decls(cfg), jax.random.key(args.seed))
+    prompt_len = max(args.prompt_len, w + args.page_size)
+    max_len = max(args.max_len, prompt_len + args.new_tokens + 1)
+    make = lambda: build_requests(args.requests, prompt_len, args.new_tokens)
+
+    paged, eng = run_once(cfg, params, args, mode="swa-paged-async",
+                          requests=make(), max_len=max_len,
+                          page_size=args.page_size, async_dispatch=True)
+    sync, eng_sync = run_once(cfg, params, args, mode="swa-paged-sync",
+                              requests=make(), max_len=max_len,
+                              page_size=args.page_size)
+    lanes, eng_lanes = run_once(cfg, params, args, mode="swa-lane-ring",
+                                requests=make(), max_len=max_len,
+                                page_size=args.page_size, paged=False)
+    _assert_identical([("swa-lane-ring", eng_lanes),
+                       ("swa-paged-sync", eng_sync),
+                       ("swa-paged-async", eng)])
+    assert eng.stats()["backend"] == "paged", "SWA must run the paged backend"
+    speedup = (paged["throughput_tok_per_sim_s"]
+               / lanes["throughput_tok_per_sim_s"])
+    stats = eng.stats()
+    np_unwindowed = -(-max_len // args.page_size)
+    out = {"arch": cfg.name, "window": w, "requests": args.requests,
+           "slots": args.slots, "gap": args.gap, "prompt_len": prompt_len,
+           "new_tokens": args.new_tokens, "max_len": max_len,
+           "page_size": args.page_size, "prefill_chunk": args.prefill_chunk,
+           "dispatch_time": args.dispatch_time, "step_time": args.step_time,
+           "paged_async": paged, "paged_sync": sync, "lane_ring": lanes,
+           "table_entries_per_slot": stats["table_entries_per_slot"],
+           "unwindowed_pages_per_slot": np_unwindowed,
+           "pages_recycled": stats["pages_recycled"],
+           "pool": stats["pool"],
+           "paged_speedup_vs_lane_ring": round(speedup, 3)}
+    if not args.json:
+        for mode in (paged, sync, lanes):
+            _print_mode(mode)
+        print(f"ring block tables: {stats['table_entries_per_slot']} "
+              f"entries/slot (window {w} / page {args.page_size}) vs "
+              f"{np_unwindowed} unwindowed; pool "
+              f"{stats['pool']['pages']} pages, high-water "
+              f"{stats['pool']['high_water']}, "
+              f"{stats['pages_recycled']} pages recycled")
+        print(f"windowed paged (async) vs lane ring cache: {speedup:.2f}x "
+              f"tokens/s; outputs bit-identical")
+    return out, speedup
+
+
 def run_kernel_bench(cfg, args) -> tuple[dict, float]:
     """Microbenchmark the fused paged-attention kernel vs its reference.
 
@@ -439,6 +514,11 @@ def main(argv=None):
                     help="distinct prompt tokens after the shared prefix")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per shared-prefix page")
+    ap.add_argument("--sliding-window", type=int, nargs="?", const=16,
+                    default=0, metavar="W",
+                    help="sliding-window workload: the windowed paged "
+                         "backend (ring block tables) vs the lane ring "
+                         "cache")
     ap.add_argument("--kernel-bench", action="store_true",
                     help="microbenchmark the paged-attention kernel vs ref")
     ap.add_argument("--kernel-iters", type=int, default=20)
@@ -460,6 +540,9 @@ def main(argv=None):
     elif args.multi_model:
         out, speedup = run_multi_model(args)
         tag, key = "__multi_model", "multi_model"
+    elif args.sliding_window:
+        out, speedup = run_sliding_window(args)
+        tag, key = "__sliding_window", "sliding_window"
     else:
         params = P.init_tree(registry.decls(cfg), jax.random.key(args.seed))
         if args.shared_prefix:

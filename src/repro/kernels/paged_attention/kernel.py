@@ -17,6 +17,17 @@ scratch, exactly like the flash kernel carries its KV-tile loop.
 Layout contract: q (B, H, D); k/v pool (P, page_size, K, D); tables (B, NP)
 int32 page ids; lengths (B,) int32 valid-position counts. GQA is folded
 head-major: head h reads KV head ``h // (H // K)``.
+
+With ``window`` set the table is a **ring block table** (the sliding-window
+serving layout): entry ``e`` holds the page of the newest block
+``b ≡ e (mod NP)`` at or below the tail block — older same-entry blocks
+have been recycled because their positions fall wholly outside the window,
+so a slot's table needs only ``ceil(window/page_size) + 1`` entries no
+matter how long the sequence runs. The kernel still streams one page per
+grid step; it just derives each entry's absolute positions from the ring
+mapping and masks to ``[kv_len - window, kv_len)``. A full-width
+contiguous table is the degenerate ring (no entry reused), so the same
+code path serves both layouts.
 """
 
 from __future__ import annotations
@@ -59,10 +70,17 @@ def _paged_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
                         preferred_element_type=jnp.float32) * scale  # (K,G,ps)
     s = s.reshape(h, page_size)
 
-    kpos = j * page_size + lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    mask = kpos < kv_len
     if window is not None:
-        mask &= kpos >= kv_len - window
+        # ring block table: entry j holds the newest block b ≡ j (mod n_p)
+        # with b <= (kv_len-1)//ps — recycled (older) blocks fall wholly
+        # outside the window, so positions derive from that block index
+        cur = (kv_len - 1) // page_size
+        blk = cur - jnp.mod(cur - j, n_p)
+        kpos = blk * page_size + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (kpos >= 0) & (kpos < kv_len) & (kpos >= kv_len - window)
+    else:
+        kpos = j * page_size + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < kv_len
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_scr[...]                            # (H, 1)

@@ -37,6 +37,9 @@ def paged_attention(q, k_pool, v_pool, tables, lengths, *,
     """Single-query paged attention over a (P, ps, K, D) page pool.
 
     q (B, H, D); tables (B, NP) int32 page ids; lengths (B,) valid counts.
+    With ``window`` the tables carry **ring** semantics — entry ``e`` holds
+    the newest block ``b ≡ e (mod NP)`` — and only the last ``window``
+    positions attend; see the ``kernel.py``/``ref.py`` module docstrings.
     """
     if impl == "pallas":
         return paged_attention_kernel(q, k_pool, v_pool, tables, lengths,
@@ -55,8 +58,11 @@ def paged_decode_append(q, k_new, v_new, k_pool, v_pool, tables, lengths, *,
     Appends ``k_new[b]``/``v_new[b]`` at position ``lengths[b]`` of slot
     ``b``'s page chain (``append_mask`` False drops the append — the lane is
     riding the batch idle and its output is ignored), then attends over
-    ``lengths[b] + 1`` positions. Returns ``(o, k_pool', v_pool')`` — pass
-    donated pools so XLA updates them in place.
+    ``lengths[b] + 1`` positions. With ``window`` the block tables are ring
+    tables (the tail entry wraps modulo the table width) and attention
+    covers only the last ``window`` positions — bit-identical to the lane
+    backend's ring cache. Returns ``(o, k_pool', v_pool')`` — pass donated
+    pools so XLA updates them in place.
     """
     if impl == "ref":
         return ref.paged_decode_append(q, k_new, v_new, k_pool, v_pool,

@@ -61,11 +61,13 @@ def paged_pool_init(cfg: ModelConfig, n_pages: int, page_size: int):
 
 
 def decode_step_paged(params, cfg: ModelConfig, pool_k, pool_v, tables,
-                      lengths, tokens, append_mask=None, impl=None):
+                      lengths, tokens, append_mask=None, impl=None,
+                      window=None):
     _require_paged(cfg)
     return transformer.decode_step_paged(params, cfg, pool_k, pool_v, tables,
                                          lengths, tokens,
-                                         append_mask=append_mask, impl=impl)
+                                         append_mask=append_mask, impl=impl,
+                                         window=window)
 
 
 def cache_abstract(cfg: ModelConfig, batch: int, max_len: int):

@@ -274,12 +274,15 @@ def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, max_len: int | N
 def supports_paged(cfg: ModelConfig) -> bool:
     """True when this config can decode against a global KV page pool.
 
-    Excluded: MoE (capacity routing mixes tokens across batch rows, so a
-    batched paged step would not be bit-independent per slot the way the
-    vmapped lane step is) and sliding-window configs (the lane cache's ring
-    layout is the memory-efficient representation there).
+    Excluded: MoE only (capacity routing mixes tokens across batch rows, so
+    a batched paged step would not be bit-independent per slot the way the
+    vmapped lane step is). Sliding-window configs page too: their block
+    tables are *rings* — ``decode_step_paged`` takes the window, the kernel
+    reads ring tables, and the engine recycles pages that fall wholly
+    outside the window, so a windowed slot holds O(window/page_size) pages
+    (the paged rendition of the lane cache's ring layout).
     """
-    return cfg.moe_experts < 2 and not cfg.sliding_window
+    return cfg.moe_experts < 2
 
 
 def paged_pool_init(cfg: ModelConfig, n_pages: int, page_size: int,
@@ -295,7 +298,8 @@ def paged_pool_init(cfg: ModelConfig, n_pages: int, page_size: int,
 
 
 def decode_step_paged(params, cfg: ModelConfig, pool_k, pool_v, tables,
-                      lengths, tokens, append_mask=None, impl: str | None = None):
+                      lengths, tokens, append_mask=None, impl: str | None = None,
+                      window: int | None = None):
     """One serving step against the global page pool (no per-slot lanes).
 
     tokens (B,) int32; lengths (B,) int32 — positions already resident per
@@ -305,6 +309,14 @@ def decode_step_paged(params, cfg: ModelConfig, pool_k, pool_v, tables,
     batch; its logits are garbage and must be ignored). Returns
     ``(logits (B, V), pool_k', pool_v')`` — pools should be donated.
 
+    ``window`` (defaulting to ``cfg.sliding_window``) switches the block
+    tables to **ring** semantics: tables need only
+    ``ceil(window/page_size) + 1`` entries, the tail entry wraps, and
+    attention covers the last ``window`` positions — bit-identical to the
+    lane backend's ring cache. Rope positions stay absolute (``lengths``),
+    exactly as the lane decode computes them. Pass an explicit ``window``
+    when the serving engine clamps it to the device cache length.
+
     Every per-slot quantity (rope position, KV length, page chain) is a
     batched vector, so one launch serves ragged slots; the attention itself
     is the fused paged kernel (``repro.kernels.paged_attention``), reading
@@ -312,6 +324,8 @@ def decode_step_paged(params, cfg: ModelConfig, pool_k, pool_v, tables,
     """
     from repro.kernels.paged_attention import ops as paged_ops
 
+    if window is None:
+        window = cfg.sliding_window
     if impl is None:
         impl = "pallas" if cfg.attn_impl == "pallas" else "ref"
     positions = lengths[:, None]
@@ -332,7 +346,7 @@ def decode_step_paged(params, cfg: ModelConfig, pool_k, pool_v, tables,
             q, k, v = _project_qkv(h, ap, cfg, positions)
             o, pk_j, pv_j = paged_ops.paged_decode_append(
                 q[:, 0], k[:, 0], v[:, 0], pk_b[j], pv_b[j], tables, lengths,
-                append_mask=append_mask, impl=impl)
+                append_mask=append_mask, window=window, impl=impl)
             x = x + jnp.einsum("bshk,hkd->bsd", o[:, None],
                                ap["wo"].astype(o.dtype))
             x, a = _ffn(x, lp, cfg, _is_moe_layer(cfg, j))

@@ -205,6 +205,7 @@ class SlotRecord:
     prefix_reused: int = 0         # prompt tokens pre-consumed at admission
     page_keys: tuple = ()          # page-table chain pinned at admission
     rematched: int = 0             # prompt tokens adopted mid-flight (re-match)
+    recycled: int = 0              # ring pages recycled out of the window
 
 
 class RequestJournal:
@@ -253,6 +254,7 @@ class RequestJournal:
         rec.prefix_reused = int(tokens_reused)
         rec.page_keys = tuple(tuple(k) for k in page_keys)
         rec.rematched = 0              # fresh admission restarts the count
+        rec.recycled = 0
 
     def note_rematch(self, request_id: str, tokens_adopted: int) -> None:
         """Journal a mid-flight prefix re-match: at a page boundary during
@@ -261,6 +263,17 @@ class RequestJournal:
         field — adoption is an optimisation only and must never change the
         emitted tokens (``record_token`` enforces that on replay)."""
         self._records[request_id].rematched += int(tokens_adopted)
+
+    def note_recycle(self, request_id: str, n_pages: int) -> None:
+        """Journal a sliding-window ring recycle: ``n_pages`` of the slot's
+        block table were released (or disowned, for adopted shared pages)
+        because their positions fell wholly outside the window. Like the
+        other page-table fields this is an audit record — recycling frees
+        memory the attention window can no longer see, so it must never
+        change the emitted tokens, and replay after ``preempt()`` stays
+        bit-identical whatever recycling the replayed run performs
+        (``record_token`` enforces that)."""
+        self._records[request_id].recycled += int(n_pages)
 
     def record_token(self, request_id: str, token: int) -> None:
         rec = self._records[request_id]

@@ -37,6 +37,9 @@ What the :class:`ServeCluster` arbitrates:
   published prefix pages — pool ids are globally valid, so adoption is
   block-table pointing even across engines. Different namespaces never
   alias (same token ids under different weights are different states).
+  Sliding-window tenants participate like any other engine (ring block
+  tables, PR 5): their recycled pages return to the *shared* free list,
+  so an SWA tenant's O(window) footprint frees budget for its peers.
 
 Invariants (held by ``tests/test_cluster.py``):
 

@@ -20,18 +20,28 @@ Two layers live here:
 
 Two device backends serve the slots:
 
-* **paged** (default for transformer-family configs) — one global KV page
-  pool plus per-slot block tables (:mod:`repro.serve.paged`), decoded by the
-  fused paged-attention kernel (:mod:`repro.kernels.paged_attention`).
-  Prefix sharing is block-table pointing: adopting a resident chain pins
-  page ids (no copy-on-write lane materialisation), publishing a completed
-  page is a refcount bump (no device gather), and two cold same-prefix
-  prefills dedup — the later one stalls on the earlier one's claim, then
-  adopts its published pages (mid-flight re-match).
-* **lanes** (SSM/hybrid/MoE/sliding-window configs, and engines sharing an
-  external page table *without* a shared pool) — the PR 2 layout: one
-  full-length cache lane per slot (``vmap`` over batch-1 decode), snapshot
-  pages, copy-on-write at the slot's first step.
+* **paged** (default for transformer-family configs, including
+  sliding-window ones) — one global KV page pool plus per-slot block
+  tables (:mod:`repro.serve.paged`), decoded by the fused paged-attention
+  kernel (:mod:`repro.kernels.paged_attention`). Prefix sharing is
+  block-table pointing: adopting a resident chain pins page ids (no
+  copy-on-write lane materialisation), publishing a completed page is a
+  refcount bump (no device gather), and two cold same-prefix prefills
+  dedup — the later one stalls on the earlier one's claim, then adopts
+  its published pages (mid-flight re-match). Sliding-window configs run
+  the same path with **ring block tables**: a slot's table holds at most
+  ``ceil(window/page_size) + 1`` entries; when the oldest page falls
+  wholly outside the window its table entry is reused — a private page
+  goes back to the pool's free list, an adopted shared-prefix page is
+  *disowned* (pool ref + table pin released; the table's own residency
+  keeps it warm for future admissions) — so a long-running windowed
+  request holds O(window) device pages instead of O(seq), and prefix
+  adoption is clamped to the pages the window can still see.
+* **lanes** (SSM/hybrid/MoE configs, and engines sharing an external
+  page table *without* a shared pool) — the PR 2 layout: one full-length
+  cache lane per slot (``vmap`` over batch-1 decode), snapshot pages,
+  copy-on-write at the slot's first step. Pass ``paged=False`` to force
+  it (e.g. as the bit-identity baseline for windowed paged serving).
 
 Since PR 4 the engine no longer has to own its allocation: pass ``pool``
 (a cluster-owned :class:`~repro.serve.paged.PagePool`) plus a shared
@@ -281,7 +291,11 @@ class _Slot:
     next_token: int = 0      # token to feed at the next engine step
     page_keys: tuple = ()    # pinned shared-prefix pages (released on evict)
     pending_snapshot: Any = None   # lane backend: shared state to CoW at 1st step
-    block_pages: list = dataclasses.field(default_factory=list)  # paged backend
+    # paged backend: block index -> pool page id. Table entry is
+    # ``block % table_width``; for windowed configs the table is a ring, so
+    # the dict holds at most ``ceil(window/page_size) + 1`` live blocks
+    pages_by_block: dict = dataclasses.field(default_factory=dict)
+    blocks_covered: int = 0  # blocks allocated/adopted so far (next to cover)
     claims: list = dataclasses.field(default_factory=list)  # dedup claims held
 
     @property
@@ -366,7 +380,9 @@ class ContinuousBatchingEngine:
         # shared table is paged territory only when its payloads are
         # globally valid pool ids, i.e. the pool is shared (cluster-owned)
         # too — otherwise the table holds other engines' snapshots and the
-        # lane backend takes over
+        # lane backend takes over. Sliding-window configs page like any
+        # other transformer config (ring block tables); only MoE routing
+        # still forces lanes.
         if pool is not None and not registry.supports_paged(cfg):
             raise ValueError(
                 f"{cfg.name} ({cfg.family}) cannot join a shared page pool: "
@@ -377,9 +393,9 @@ class ContinuousBatchingEngine:
             paged = can_page
         elif paged and not can_page:
             raise ValueError(
-                "paged backend needs a transformer-family config without "
-                "MoE/sliding-window and either an engine-private page table "
-                "or a shared (cluster-owned) pool")
+                "paged backend needs a transformer-family KV config (MoE "
+                "still routes across lanes) and either an engine-private "
+                "page table or a shared (cluster-owned) pool")
         if pool is not None and not paged:
             raise ValueError("a shared pool is a paged-backend resource; "
                              "drop it or drop paged=False")
@@ -391,7 +407,19 @@ class ContinuousBatchingEngine:
         # table is always bounded; build a PageTable(capacity_pages=None)
         # yourself if you really want unbounded residency.
         self._ps = (pool.page_size if pool is not None else page_size) or 16
-        self._np_max = -(-self.device_len // self._ps)
+        np_max = -(-self.device_len // self._ps)
+        # sliding-window configs: the device ring modulus is the lane
+        # cache length (min(window, device_len) — bit-identity with the
+        # lane backend), and a slot's block table is a ring of
+        # ceil(window/page_size)+1 entries: by the time an entry is
+        # reused, its old block's positions fall wholly outside the window
+        if cfg.sliding_window:
+            self._window: int | None = min(cfg.sliding_window,
+                                           self.device_len)
+            self._np_slot = min(np_max, -(-self._window // self._ps) + 1)
+        else:
+            self._window = None
+            self._np_slot = np_max
         cap = 0
         self.owns_pool = pool is None
         self._pool: PagePool | None = pool
@@ -401,7 +429,9 @@ class ContinuousBatchingEngine:
                 if page_size:
                     cap = (page_capacity if page_capacity is not None
                            else 16 * slots)
-                self._pool = PagePool(slots * self._np_max + cap, self._ps)
+                # a windowed engine provisions O(window) pages per slot,
+                # not O(device_len) — the ring bound is the pool budget
+                self._pool = PagePool(slots * self._np_slot + cap, self._ps)
             self._arena = self._pool.arena(cfg)
         if page_table is not None:
             self.pages: PageTable | None = page_table
@@ -439,12 +469,13 @@ class ContinuousBatchingEngine:
         self.admission_stalls = 0              # admissions vetoed by the hook
         self.rematches = 0                     # mid-flight prefix adoptions
         self.rematched_tokens = 0              # prompt tokens adopted mid-flight
+        self.pages_recycled = 0                # ring entries reused (windowed)
         self.completed: list[Request] = []
         self.rejected = 0
 
         if self.paged:
-            self._pstep = paged_step_fn(cfg)
-            self._pchunk = (paged_chunk_fn(cfg, prefill_chunk)
+            self._pstep = paged_step_fn(cfg, self._window)
+            self._pchunk = (paged_chunk_fn(cfg, prefill_chunk, self._window)
                             if prefill_chunk > 1 else None)
             self._cache = None
         else:
@@ -548,12 +579,30 @@ class ContinuousBatchingEngine:
             # copy is deferred to the first step (copy-on-write), so a
             # slot preempted before it runs never pays for the copy.
             slot.fed = match.tokens_matched
-            slot.page_keys = match.keys
             if self.paged:
-                for idx in match.chain:
+                # window clamp: chain pages wholly below the window the
+                # slot will ever attend from (positions < fed+1-window)
+                # are never read — their tokens still count as reused
+                # (nothing recomputes them), but the slot neither pins
+                # them in the pool nor keeps them pinned in the table
+                first_needed = 0
+                if self._window is not None:
+                    first_needed = max(
+                        0, slot.fed + 1 - self._window) // self._ps
+                kept = []
+                for b, (key, idx) in enumerate(zip(match.keys, match.chain)):
+                    if b < first_needed:
+                        continue
                     self._pool.retain(idx)
-                slot.block_pages = list(match.chain)
+                    slot.pages_by_block[b] = idx
+                    kept.append(key)
+                dropped = match.keys[:len(match.keys) - len(kept)]
+                if dropped:
+                    self.pages.release(dropped, self.namespace)
+                slot.page_keys = tuple(kept)
+                slot.blocks_covered = slot.fed // self._ps
             else:
+                slot.page_keys = match.keys
                 slot.pending_snapshot = match.snapshot
             self.prompt_tokens_reused += match.tokens_matched
         slot.next_token = req.prompt[slot.fed]
@@ -731,38 +780,74 @@ class ContinuousBatchingEngine:
     # -- paged-backend plumbing ----------------------------------------------
 
     def _build_tables(self):
-        t = np.full((self.n_lanes, self._np_max), self._pool.null, np.int32)
+        t = np.full((self.n_lanes, self._np_slot), self._pool.null, np.int32)
         lengths = np.zeros((self.n_lanes,), np.int32)
         for i, slot in enumerate(self.slots):
             if slot is None:
                 continue
-            t[i, :len(slot.block_pages)] = slot.block_pages
+            for b, idx in slot.pages_by_block.items():
+                t[i, b % self._np_slot] = idx
             lengths[i] = slot.fed
         return jnp.asarray(t), jnp.asarray(lengths)
 
     def _ensure_pages(self, slot: _Slot, target: int) -> None:
-        """Grow the slot's block table to cover positions [0, target)."""
+        """Grow the slot's block table to cover positions [0, target).
+
+        Windowed configs: the table is a ring — covering a new block first
+        recycles whatever older block occupies its entry (by then that
+        block's positions fall wholly outside the window), so the slot
+        never holds more than ``ceil(window/page_size) + 1`` pages.
+        """
         need = -(-target // self._ps)
-        while len(slot.block_pages) < need:
+        while slot.blocks_covered < need:
+            b = slot.blocks_covered
+            self._free_entry(slot, b)
             if not self._pool.free_count:
                 if self._reclaim is not None:
                     self._reclaim(self)    # cluster: fair cross-tenant evict
                 elif self.pages is not None:
                     self.pages.clear()     # recycle unpinned shared residency
-            slot.block_pages.append(self._pool.alloc(self.name))
+            slot.pages_by_block[b] = self._pool.alloc(self.name)
+            slot.blocks_covered = b + 1
+
+    def _free_entry(self, slot: _Slot, b: int) -> None:
+        """Ring recycling: drop whatever older block occupies block ``b``'s
+        table entry. A private page returns to the pool's free list; an
+        adopted shared-prefix page is *disowned* — the slot's pool ref and
+        table pin are released, while the table's own residency keeps the
+        page warm for future admissions. No-op for non-windowed slots (the
+        full-width table never aliases two blocks onto one entry)."""
+        if self._window is None:
+            return
+        width = self._np_slot
+        for b_old in [o for o in slot.pages_by_block
+                      if o % width == b % width and o != b]:
+            self._pool.release(slot.pages_by_block.pop(b_old))
+            key = slot.request.prompt[:(b_old + 1) * self._ps]
+            if key in slot.page_keys:
+                self.pages.release((key,), self.namespace)
+                slot.page_keys = tuple(k for k in slot.page_keys if k != key)
+            self.pages_recycled += 1
+            self.journal.note_recycle(slot.request.id, 1)
 
     def _try_rematch(self, slot: _Slot) -> None:
         """Mid-flight prefix re-match: adopt a sibling's freshly published
         pages covering tokens this slot has not computed yet. Pure
         block-table surgery — any partially-written private page in the
         adopted range is released (its positions hold the same values the
-        shared page does, since both ran the same prompt prefix)."""
+        shared page does, since both ran the same prompt prefix). Windowed
+        slots clamp the adoption to the blocks the window can still see
+        after the jump; blocks below it are skipped outright (their tokens
+        count as reused, their pages are never pinned)."""
         prompt = slot.request.prompt
         m = self.pages.lookup(prompt, self.namespace)
         if m <= slot.fed:
             return
         ps = self.pages.page_size
-        ext = self.pages.acquire_range(prompt, slot.fed // ps, m // ps,
+        from_block = slot.fed // ps
+        if self._window is not None:
+            from_block = max(from_block, (m + 1 - self._window) // ps)
+        ext = self.pages.acquire_range(prompt, from_block, m // ps,
                                        self.namespace)
         if not ext:
             return
@@ -770,12 +855,12 @@ class ContinuousBatchingEngine:
         for key, idx in ext:
             self._pool.retain(idx)
             b = len(key) // ps - 1
-            if b < len(slot.block_pages):
-                self._pool.release(slot.block_pages[b])
-                slot.block_pages[b] = idx
-            else:
-                slot.block_pages.append(idx)
+            self._free_entry(slot, b)      # ring: evict the entry's old block
+            if b in slot.pages_by_block:
+                self._pool.release(slot.pages_by_block[b])
+            slot.pages_by_block[b] = idx
         slot.page_keys += tuple(k for k, _ in ext)
+        slot.blocks_covered = max(slot.blocks_covered, m // ps)
         slot.fed = m
         slot.next_token = prompt[m]
         self.prompt_tokens_reused += adopted
@@ -844,7 +929,7 @@ class ContinuousBatchingEngine:
         if not self.pages.wants(key, self.namespace):
             return
         if self.paged:
-            idx = slot.block_pages[fed // self.pages.page_size - 1]
+            idx = slot.pages_by_block[fed // self.pages.page_size - 1]
             self._pool.retain(idx)         # residency reference
             if not self.pages.publish(key, idx, self.namespace):
                 self._pool.release(idx)
@@ -862,9 +947,9 @@ class ContinuousBatchingEngine:
                 slot.page_keys = ()
             slot.pending_snapshot = None
             if self.paged:
-                for idx in slot.block_pages:
+                for idx in slot.pages_by_block.values():
                     self._pool.release(idx)
-                slot.block_pages = []
+                slot.pages_by_block = {}
             self._drop_claims(slot)
         self.slots[i] = None
         self._dirty.add(i)
@@ -976,6 +1061,9 @@ class ContinuousBatchingEngine:
             "prefill_chunk": self.prefill_chunk,
             "backend": "paged" if self.paged else "lanes",
             "async_dispatch": self.async_dispatch,
+            "window": self._window,
+            "table_entries_per_slot": self._np_slot if self.paged else None,
+            "pages_recycled": self.pages_recycled,
             "stalls": self.stalls,
             "admission_stalls": self.admission_stalls,
             "rematches": self.rematches,

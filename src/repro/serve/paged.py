@@ -195,7 +195,7 @@ class PagePool:
         return {i: int(r) for i, r in enumerate(self._refs) if r > 0}
 
 
-def paged_step_fn(cfg: ModelConfig):
+def paged_step_fn(cfg: ModelConfig, window: int | None = None):
     """Jitted single-token paged decode over every lane.
 
     Signature: ``(params, pool_k, pool_v, tables, lengths, toks, feedback,
@@ -203,31 +203,35 @@ def paged_step_fn(cfg: ModelConfig):
     host-chosen tokens, ``feedback`` (B,) selects the previous step's
     on-device argmax ``prev`` instead (async double-buffering), and ``mask``
     (B,) gates the KV append (False = idle/stalled lane riding the batch).
-    Pools are donated.
+    ``window`` (sliding-window configs) switches the block tables to ring
+    semantics — pass the engine's *clamped* window (``min(cfg.sliding_
+    window, device cache length)``) so the decode stays bit-identical to
+    the lane ring cache. Pools are donated.
     """
-    key = ("step", cfg)
+    key = ("step", cfg, window)
     if key not in _PAGED_FNS:
         def step(params, pool_k, pool_v, tables, lengths, toks, feedback,
                  prev, mask):
             tok = jnp.where(feedback, prev, toks)
             logits, pool_k, pool_v = registry.decode_step_paged(
                 params, cfg, pool_k, pool_v, tables, lengths, tok,
-                append_mask=mask)
+                append_mask=mask, window=window)
             return (jnp.argmax(logits, -1).astype(jnp.int32), pool_k, pool_v)
 
         _PAGED_FNS[key] = jax.jit(step, donate_argnums=(1, 2))
     return _PAGED_FNS[key]
 
 
-def paged_chunk_fn(cfg: ModelConfig, chunk: int):
+def paged_chunk_fn(cfg: ModelConfig, chunk: int, window: int | None = None):
     """Jitted chunked step: up to ``chunk`` tokens per lane in one launch.
 
     Scans the single-token paged step; iterations past a lane's ``count``
     are masked appends (the pool is untouched bitwise, so a decode lane
     with ``count == 1`` sees exactly one append). The returned token is the
-    argmax after each lane's last fed token. Pools are donated.
+    argmax after each lane's last fed token. ``window`` as in
+    :func:`paged_step_fn`. Pools are donated.
     """
-    key = ("chunk", cfg, chunk)
+    key = ("chunk", cfg, chunk, window)
     if key not in _PAGED_FNS:
         def step(params, pool_k, pool_v, tables, lengths, toks, counts,
                  feedback, prev):
@@ -237,7 +241,7 @@ def paged_chunk_fn(cfg: ModelConfig, chunk: int):
                 tok = jnp.where((j == 0) & feedback, prev, tok_j)
                 logits, pool_k, pool_v = registry.decode_step_paged(
                     params, cfg, pool_k, pool_v, tables, lengths + j, tok,
-                    append_mask=j < counts)
+                    append_mask=j < counts, window=window)
                 return ((pool_k, pool_v),
                         jnp.argmax(logits, -1).astype(jnp.int32))
 

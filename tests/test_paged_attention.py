@@ -28,10 +28,11 @@ def _paged(q, kp, vp, tables, lengths, *, impl, window=None):
                                impl=impl)
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def _append(q, k_new, v_new, kp, vp, tables, lengths, mask, *, impl):
+@functools.partial(jax.jit, static_argnames=("impl", "window"))
+def _append(q, k_new, v_new, kp, vp, tables, lengths, mask, *, impl,
+            window=None):
     return ops.paged_decode_append(q, k_new, v_new, kp, vp, tables, lengths,
-                                   append_mask=mask, impl=impl)
+                                   append_mask=mask, impl=impl, window=window)
 
 
 def t(*shape, dtype=jnp.float32, scale=1.0):
@@ -160,6 +161,67 @@ def test_append_positions_compose_into_a_decode_chain():
         want = oracle(q, kc, vc, step + 1, step)
         np.testing.assert_allclose(np.asarray(o[0]), np.asarray(want),
                                    atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [3, 4, 6, 9])
+def test_ring_block_table_decode_matches_windowed_oracle(window):
+    """Decoding through a *ring* block table — ceil(window/ps)+1 entries,
+    the tail entry wrapping and old pages recycled — reproduces windowed
+    attention over the full contiguous history at every step, for windows
+    smaller than (3), equal to (4), and not multiples of (6, 9) the page
+    size. This is the layout the serving engine keeps for sliding-window
+    configs; page ids are deliberately reused so recycled pages carry
+    stale positions the mask must hide."""
+    h, kh, d, ps, steps = 4, 2, 8, 4, 14
+    r = -(-window // ps) + 1
+    ids = r + 2                       # rotating live ids; row `ids` = null
+    pools = {impl: (jnp.zeros((ids + 1, ps, kh, d)),
+                    jnp.zeros((ids + 1, ps, kh, d)))
+             for impl in ("ref", "pallas")}
+    tables = np.full((1, r), ids, np.int32)
+    kc = jnp.zeros((1, steps, kh, d))     # contiguous mirror of the history
+    vc = jnp.zeros((1, steps, kh, d))
+    oracle = jax.jit(lambda q, kc, vc, n, off: attention_ref(
+        q[:, None], kc, vc, causal=False, window=window, q_offset=off,
+        kv_len=n)[0, 0])
+    for n in range(steps):
+        blk = n // ps
+        if n % ps == 0:
+            # ring install: the entry's previous occupant (block blk - r)
+            # is recycled; its page id returns to the rotation
+            tables[0, blk % r] = blk % ids
+        q = t(1, h, d)
+        kn, vn = t(1, kh, d), t(1, kh, d)
+        kc, vc = kc.at[0, n].set(kn[0]), vc.at[0, n].set(vn[0])
+        want = oracle(q, kc, vc, n + 1, n)
+        lengths = jnp.asarray([n], jnp.int32)
+        for impl in ("ref", "pallas"):
+            kp, vp = pools[impl]
+            o, kp, vp = _append(q, kn, vn, kp, vp, jnp.asarray(tables),
+                                lengths, None, impl=impl, window=window)
+            pools[impl] = (kp, vp)
+            np.testing.assert_allclose(np.asarray(o[0]), np.asarray(want),
+                                       atol=2e-5, rtol=2e-5,
+                                       err_msg=f"{impl} step {n}")
+
+
+def test_ring_append_wraps_into_the_reused_entry():
+    """Past the ring, the fused append lands in the page the wrapped table
+    entry points at — offset ``lengths % ps`` of page ``tables[(lengths //
+    ps) % R]`` — for both impls."""
+    h, kh, d, ps = 4, 2, 8, 4
+    window, r = 4, 2
+    kp, vp = t(5, ps, kh, d), t(5, ps, kh, d)
+    tables = jnp.asarray([[3, 1]], jnp.int32)   # entry 0 now holds block 2
+    lengths = jnp.asarray([9], jnp.int32)       # block 2, offset 1 -> entry 0
+    q, kn, vn = t(1, h, d), t(1, kh, d), t(1, kh, d)
+    for impl in ("ref", "pallas"):
+        _, kp2, vp2 = _append(q, kn, vn, kp, vp, tables, lengths, None,
+                              impl=impl, window=window)
+        np.testing.assert_array_equal(np.asarray(kp2[3, 1]),
+                                      np.asarray(kn[0]))
+        np.testing.assert_array_equal(np.asarray(vp2[3, 1]),
+                                      np.asarray(vn[0]))
 
 
 def test_xaif_registers_paged_attention():

@@ -1,4 +1,4 @@
-"""Docs gate: intra-repo links must resolve, public serve API documented.
+"""Docs gate: links resolve, serving API documented, bench numbers fresh.
 
 Run as ``make docs-check`` (also a prerequisite of ``make test-fast``).
 Checks, failing the build with a listing of every violation:
@@ -7,27 +7,54 @@ Checks, failing the build with a listing of every violation:
    file or directory that exists (anchors and external URLs are skipped;
    ``path#fragment`` is checked for the ``path`` part).
 2. Every public class and function defined in the ``repro.serve.*``
-   modules carries a docstring — the serving engine is the repo's primary
-   user-facing API and must stay self-describing.
+   modules **and** the paged-attention kernel package
+   (``repro.kernels.paged_attention.*``) carries a docstring — the serving
+   engine and its decode kernel are the repo's primary user-facing API and
+   must stay self-describing.
+3. The README benchmark table (the ``bench-table`` marker block) matches
+   what ``tools/bench_table.py`` renders from the committed
+   ``BENCH_serve.json`` — a fresh ``make bench-json`` without ``make
+   bench-table`` fails here instead of shipping stale numbers.
+4. Every exact benchmark figure quoted in README/docs prose matches the
+   committed ``BENCH_serve.json``:
+
+   * two-decimal speedups (``1.84×`` / ``2.82x``) must equal some numeric
+     leaf of the JSON rounded the same way — approximations written with
+     one decimal (``~1.8×``) are deliberately exempt;
+   * ``A vs B`` integer pairs on lines mentioning pages (the device-page
+     savings quotes) must both be integer leaves of the JSON.
 """
 
 from __future__ import annotations
 
 import importlib
 import inspect
+import json
 import pathlib
 import re
 import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO / "tools"))
 
 # [text](target) — excluding images handled identically, so one pattern
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _EXTERNAL = ("http://", "https://", "mailto:")
 
-SERVE_MODULES = ("repro.serve.cluster", "repro.serve.engine",
-                 "repro.serve.paged", "repro.serve.pages", "repro.serve.sim")
+DOC_MODULES = (
+    "repro.serve.cluster", "repro.serve.engine", "repro.serve.paged",
+    "repro.serve.pages", "repro.serve.sim",
+    "repro.kernels.paged_attention.kernel",
+    "repro.kernels.paged_attention.ops",
+    "repro.kernels.paged_attention.ref",
+)
+
+BENCH_JSON = REPO / "BENCH_serve.json"
+# exact two-decimal speedup quote: "1.84×" / "2.82x" (one-decimal
+# approximations like "~1.8×" are prose, not artifact numbers)
+_SPEEDUP = re.compile(r"(?<![\d.])(\d+\.\d{2})[×x]")
+_VS_PAIR = re.compile(r"\b(\d+) vs (\d+)\b")
 
 
 def _doc_files() -> list[pathlib.Path]:
@@ -55,9 +82,9 @@ def check_links() -> list[str]:
     return errors
 
 
-def check_serve_docstrings() -> list[str]:
+def check_docstrings() -> list[str]:
     errors = []
-    for modname in SERVE_MODULES:
+    for modname in DOC_MODULES:
         mod = importlib.import_module(modname)
         if not (mod.__doc__ or "").strip():
             errors.append(f"{modname}: missing module docstring")
@@ -80,8 +107,68 @@ def check_serve_docstrings() -> list[str]:
     return errors
 
 
+def _numeric_leaves(node, out: set) -> set:
+    if isinstance(node, bool):
+        return out
+    if isinstance(node, (int, float)):
+        out.add(float(node))
+    elif isinstance(node, dict):
+        for v in node.values():
+            _numeric_leaves(v, out)
+    elif isinstance(node, list):
+        for v in node:
+            _numeric_leaves(v, out)
+    return out
+
+
+def check_bench_numbers() -> list[str]:
+    """Exact figures quoted in prose must match BENCH_serve.json, and the
+    README's generated table must match what the JSON renders to."""
+    errors = []
+    if not BENCH_JSON.exists():
+        return [f"{BENCH_JSON.name}: missing (run `make bench-json`)"]
+    data = json.loads(BENCH_JSON.read_text())
+    leaves = _numeric_leaves(data, set())
+    rounded = {round(v, 2) for v in leaves}
+    ints = {int(v) for v in leaves if float(v).is_integer()}
+    for md in _doc_files():
+        rel = md.relative_to(REPO)
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            for quote in _SPEEDUP.findall(line):
+                if float(quote) not in rounded:
+                    errors.append(
+                        f"{rel}:{lineno}: quoted speedup {quote}× not in "
+                        f"BENCH_serve.json (stale number? run `make "
+                        f"bench-json` + `make bench-table`)")
+            if "page" in line.lower():
+                for a, b in _VS_PAIR.findall(line):
+                    for n in (int(a), int(b)):
+                        if n not in ints:
+                            errors.append(
+                                f"{rel}:{lineno}: page count {n} (in "
+                                f"'{a} vs {b}') not in BENCH_serve.json")
+
+    import bench_table
+
+    readme = (REPO / "README.md").read_text()
+    have = bench_table.current_block(readme)
+    try:
+        want = bench_table.rendered_block(data)
+    except KeyError as e:
+        # a partial bench-json run (one mode, or interrupted) leaves the
+        # file missing whole sections — report it, don't traceback
+        return errors + [f"{BENCH_JSON.name}: missing section {e} "
+                         f"(run the full `make bench-json`)"]
+    if have is None:
+        errors.append("README.md: bench-table marker block missing")
+    elif have != want:
+        errors.append("README.md: benchmark table stale vs BENCH_serve.json "
+                      "— run `make bench-table`")
+    return errors
+
+
 def main() -> int:
-    errors = check_links() + check_serve_docstrings()
+    errors = check_links() + check_docstrings() + check_bench_numbers()
     if errors:
         print(f"docs-check: {len(errors)} problem(s)")
         for e in errors:
@@ -89,7 +176,7 @@ def main() -> int:
         return 1
     n_files = len(_doc_files())
     print(f"docs-check: OK ({n_files} doc file(s), "
-          f"{len(SERVE_MODULES)} serve modules)")
+          f"{len(DOC_MODULES)} documented modules, bench numbers fresh)")
     return 0
 
 
