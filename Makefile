@@ -4,6 +4,7 @@
 #                     (runs docs-check first)
 #   make test-all     full suite including subprocess multi-device + sweeps
 #   make bench-serve  arrivals-trace serving benchmark (continuous vs sequential)
+#   make sim-smoke    fast open-loop smoke: seeded 1k-request trace, < 10 s
 #   make docs-check   intra-repo links in README/docs + serve/* docstrings
 #
 # bench-serve forwards extra flags given after `--` (and anything in
@@ -17,7 +18,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 BENCH_PASSTHRU = $(filter-out bench-serve,$(MAKECMDGOALS))
 
-.PHONY: test-fast test-all bench-serve bench-json bench-table docs-check
+.PHONY: test-fast test-all bench-serve bench-json bench-table docs-check \
+	sim-smoke
 
 # Fast tier compiles at XLA opt level 0: the suite is compile-bound (tiny
 # smoke models, hundreds of small programs) and every correctness assertion
@@ -50,6 +52,16 @@ bench-json:
 	$(PY) benchmarks/serve_bench.py --requests 16 --slots 4 --gap 2.0 \
 		--new-tokens 16 --sliding-window --json --bench-json
 	$(PY) benchmarks/serve_bench.py --slots 4 --kernel-bench --json --bench-json
+	$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
+		--open-loop --json --bench-json
+
+# fast-tier open-loop smoke: a seeded 1k-request trace through the full
+# SLO-aware pipeline (loadgen -> cluster -> metrics), < 10 s on CPU
+sim-smoke:
+	XLA_FLAGS="--xla_backend_optimization_level=0 $$XLA_FLAGS" \
+		$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
+		--open-loop 1000 --open-loop-skip-flat --json > /dev/null
+	@echo "sim-smoke: 1k-request open-loop trace OK"
 
 # regenerate the README benchmark table from the committed BENCH_serve.json
 # (docs-check fails when the two drift, so PRs stop hand-editing numbers)

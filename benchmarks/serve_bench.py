@@ -24,6 +24,12 @@ overlaps them (see :class:`repro.serve.sim.Simulator`). Modes:
   page_size)``), the pool pages provisioned, and pages recycled.
 * ``--kernel-bench`` — microbenchmark of the fused paged-attention Pallas
   kernel (interpret mode on CPU) against its pure-jax reference.
+* ``--open-loop [N]`` — N lazily generated open-loop arrivals (seeded
+  bursty/Poisson/diurnal process, default 10⁵) at an offered load far
+  above cluster capacity: SLO-aware scheduling (DRR over ``step_cost`` +
+  TTFT shedding + deadline preemption) vs flat WRR, compared on goodput,
+  p50/p99 TTFT, per-token latency, and SLO attainment. Two same-seed SLO
+  runs are asserted bit-identical before any number is reported.
 * ``--multi-model`` — the PR 4 cluster workload: two models / three
   engines (two replicas of one model sharing a namespace, plus a second
   model) on one ``ServeCluster`` — one shared ``PagePool``/``PageTable``
@@ -425,6 +431,176 @@ def run_sliding_window(args) -> tuple[dict, float]:
     return out, speedup
 
 
+def run_open_loop(args) -> tuple[dict, float]:
+    """Open-loop traffic at 10⁵-request scale: SLO-aware vs flat WRR.
+
+    A lazily generated bursty arrival trace (``repro.serve.loadgen``) is
+    driven through a 3-engine cluster at an offered load far above
+    capacity — arrivals never wait for the system, so queues build,
+    backpressure rejects, and the question becomes *goodput*: tokens
+    delivered inside each request's SLO. Two scheduling policies serve
+    the byte-identical trace:
+
+    * ``slo_sched`` — deficit-weighted round-robin over ``step_cost()``
+      plus latency-SLO admission control (shed queue heads that already
+      blew their TTFT budget) plus preempt-and-requeue of decoding
+      requests past their deadline.
+    * ``flat_wrr`` — the PR 4 scheduler: fixed grants, FIFO heads, no
+      shedding. Under overload it serves a stale backlog, so most of its
+      completions bust their TTFT target.
+
+    Determinism is asserted, not assumed: the SLO run executes twice from
+    two independently constructed clusters and generators, and the
+    reports, metric summaries, and every request's token stream must be
+    bit-identical. Requests completed by both policies must also produce
+    identical tokens (scheduling may reorder work, never change it).
+    """
+    from repro.serve.cluster import SchedPolicy, ServeCluster
+    from repro.serve.loadgen import TenantSpec, open_loop_trace
+    from repro.serve.metrics import SLO, ServeMetrics
+    from repro.serve.sim import ClusterSimulator
+
+    n, rate = args.open_loop, args.open_loop_rate
+    cfg_a = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    cfg_b = (configs.smoke(args.arch_b) if args.smoke
+             else configs.get(args.arch_b))
+    params_a = P.init_tree(registry.decls(cfg_a), jax.random.key(args.seed))
+    params_b = P.init_tree(registry.decls(cfg_b),
+                           jax.random.key(args.seed + 1))
+
+    ttft_cap, tpot_rep, tpot_alt = 25.0, 4.0, 1.0
+    # two replicas of one model (shared namespace + prefix_seed: their
+    # bursts exercise cross-engine cold-prefill dedup) and one long-output
+    # tenant whose tight per-token budget makes its tails preemptable
+    tenants = [
+        TenantSpec(engine="rep-a", share=1.0, prompt_len=(6, 18),
+                   new_tokens=(4, 10), prefix_len=8, prefix_seed=7,
+                   slo=SLO(ttft=ttft_cap, tpot=tpot_rep)),
+        TenantSpec(engine="rep-b", share=1.0, prompt_len=(6, 18),
+                   new_tokens=(4, 10), prefix_len=8, prefix_seed=7,
+                   slo=SLO(ttft=ttft_cap, tpot=tpot_rep)),
+        TenantSpec(engine="alt", share=0.5, prompt_len=(4, 12),
+                   new_tokens=(16, 28), prefix_len=6, prefix_seed=3,
+                   slo=SLO(ttft=ttft_cap, tpot=tpot_alt)),
+    ]
+    max_len = {"rep-a": 32, "rep-b": 32, "alt": 48}
+    ps = 8
+    pool_pages = sum(args.slots * -(-m // ps) for m in max_len.values()) + 24
+
+    def drive(policy):
+        clock = FakeClock()
+        cluster = ServeCluster(pool_pages=pool_pages, page_size=ps,
+                               clock=clock, policy=policy)
+        for name, cfg, params, ns in (
+                ("rep-a", cfg_a, params_a, cfg_a.name),
+                ("rep-b", cfg_a, params_a, cfg_a.name),
+                ("alt", cfg_b, params_b, cfg_b.name)):
+            cluster.add_engine(cfg, params, name=name, namespace=ns,
+                               slots=args.slots, max_len=max_len[name],
+                               prefill_chunk=args.prefill_chunk,
+                               queue_capacity=args.queue_capacity)
+        trace = open_loop_trace(tenants, n_requests=n, rate=rate,
+                                seed=args.seed,
+                                process=args.open_loop_process)
+        sim = ClusterSimulator(cluster, trace, clock,
+                               step_time=args.step_time,
+                               dispatch_time=args.dispatch_time)
+        w0 = time.perf_counter()
+        report = sim.run(max_steps=5_000_000)
+        wall = time.perf_counter() - w0
+        metrics = ServeMetrics()
+        tokens = {}
+        for eng in cluster.engines.values():
+            metrics.observe_all(eng.completed)
+            tokens.update((r.id, tuple(r.tokens)) for r in eng.completed)
+        return report, metrics.summary(elapsed=report.elapsed), tokens, \
+            cluster, wall
+
+    def digest(report, summary, tokens):
+        return (report.elapsed, report.steps, report.tokens_generated,
+                report.rejected, report.shed,
+                {k: [r.id for r in v] for k, v in report.completed.items()},
+                summary, tokens)
+
+    slo_policy = SchedPolicy(scheduler="drr", shed_busted=True,
+                             preempt_busted=True)
+    rep1, sum1, tok1, cl1, wall1 = drive(slo_policy)
+    rep2, sum2, tok2, cl2, _ = drive(slo_policy)
+    if digest(rep1, sum1, tok1) != digest(rep2, sum2, tok2):
+        raise AssertionError(
+            "open-loop run is not deterministic: two same-seed runs "
+            "diverged — the trace/scheduler must be bit-reproducible")
+    compare = not args.open_loop_skip_flat
+    if compare:
+        flat, sumf, tokf, clf, wallf = drive(SchedPolicy())
+        common = tok1.keys() & tokf.keys()
+        diverged = [i for i in common if tok1[i] != tokf[i]]
+        if diverged:
+            raise AssertionError(
+                f"{len(diverged)} requests produced different tokens under "
+                "the two schedulers (e.g. "
+                f"{sorted(diverged)[:3]}) — scheduling must never change "
+                "outputs")
+        gain = (sum1["goodput"] / sumf["goodput"]
+                if sumf.get("goodput") else float("inf"))
+    else:
+        gain = 1.0
+
+    def mode(tag, report, summary, cluster, wall):
+        return {
+            "policy": tag, "elapsed_sim": report.elapsed,
+            "rounds": report.steps, "tokens": report.tokens_generated,
+            "served": summary["completed"], "rejected": report.rejected,
+            "shed": report.shed, "slo_preempts": cluster.slo_preempts,
+            "ttft_p50": round(summary["ttft_p50"], 3),
+            "ttft_p99": round(summary["ttft_p99"], 3),
+            "tpot_p50": round(summary["tpot_p50"], 3),
+            "tpot_p99": round(summary["tpot_p99"], 3),
+            "slo_attainment": round(summary["slo_attainment"], 4),
+            "goodput_tok_per_sim_s": round(summary["goodput"], 4),
+            "throughput_tok_per_sim_s": round(report.throughput, 4),
+            "wall_s": round(wall, 3),
+        }
+
+    out = {"arch": cfg_a.name, "arch_b": cfg_b.name, "requests": n,
+           "rate": rate, "process": args.open_loop_process, "engines": 3,
+           "slots": args.slots, "queue_capacity": args.queue_capacity,
+           "page_size": ps, "prefill_chunk": args.prefill_chunk,
+           "dispatch_time": args.dispatch_time, "step_time": args.step_time,
+           "slo": {"ttft": ttft_cap, "tpot_rep": tpot_rep,
+                   "tpot_alt": tpot_alt},
+           "slo_sched": mode("drr+shed+preempt", rep1, sum1, cl1, wall1),
+           "deterministic": True}
+    if compare:
+        out["flat_wrr"] = mode("wrr", flat, sumf, clf, wallf)
+        out["goodput_gain"] = round(gain, 3)
+    if n >= 10_000:
+        # at bench scale the SLO machinery must demonstrably engage and win
+        assert rep1.shed > 0, "no SLO-busted heads were shed"
+        assert cl1.slo_preempts > 0, "no SLO-busting tails were preempted"
+        if compare:
+            assert gain > 1.0, (
+                f"SLO-aware scheduling must beat flat WRR on goodput "
+                f"(got {gain:.3f}x)")
+    if not args.json:
+        for m in ([out["slo_sched"], out["flat_wrr"]] if compare
+                  else [out["slo_sched"]]):
+            print(f"{m['policy']:>16}: {m['served']} served / "
+                  f"{m['rejected']} rejected / {m['shed']} shed of {n} "
+                  f"arrivals in {m['elapsed_sim']:.0f} sim-s; TTFT p50/p99 "
+                  f"{m['ttft_p50']:.1f}/{m['ttft_p99']:.1f}, TPOT p99 "
+                  f"{m['tpot_p99']:.2f}, attainment "
+                  f"{m['slo_attainment']:.1%}, goodput "
+                  f"{m['goodput_tok_per_sim_s']:.3f} tok/sim-s")
+        if compare:
+            print(f"SLO-aware vs flat WRR goodput: {gain:.2f}x; two "
+                  f"same-seed runs bit-identical ({n} open-loop arrivals)")
+        else:
+            print(f"two same-seed runs bit-identical ({n} open-loop "
+                  f"arrivals; flat-WRR comparison skipped)")
+    return out, gain
+
+
 def run_kernel_bench(cfg, args) -> tuple[dict, float]:
     """Microbenchmark the fused paged-attention kernel vs its reference.
 
@@ -519,6 +695,22 @@ def main(argv=None):
                     help="sliding-window workload: the windowed paged "
                          "backend (ring block tables) vs the lane ring "
                          "cache")
+    ap.add_argument("--open-loop", type=int, nargs="?", const=100_000,
+                    default=0, metavar="N",
+                    help="open-loop workload: N lazily generated arrivals "
+                         "(SLO-aware scheduling vs flat WRR on goodput)")
+    ap.add_argument("--open-loop-rate", type=float, default=100.0,
+                    help="mean arrival rate (requests per sim-s) of the "
+                         "open-loop trace")
+    ap.add_argument("--open-loop-process", default="bursty",
+                    choices=("poisson", "bursty", "diurnal"),
+                    help="arrival process of the open-loop trace")
+    ap.add_argument("--queue-capacity", type=int, default=48,
+                    help="per-engine queue bound of the open-loop cluster "
+                         "(beyond it, arrivals are rejected)")
+    ap.add_argument("--open-loop-skip-flat", action="store_true",
+                    help="skip the flat-WRR comparison run (smoke tier: "
+                         "determinism pair only)")
     ap.add_argument("--kernel-bench", action="store_true",
                     help="microbenchmark the paged-attention kernel vs ref")
     ap.add_argument("--kernel-iters", type=int, default=20)
@@ -537,6 +729,9 @@ def main(argv=None):
     if args.kernel_bench:
         out, speedup = run_kernel_bench(cfg, args)
         tag, key = "__kernel", "kernel"
+    elif args.open_loop:
+        out, speedup = run_open_loop(args)
+        tag, key = "__open_loop", "open_loop"
     elif args.multi_model:
         out, speedup = run_multi_model(args)
         tag, key = "__multi_model", "multi_model"

@@ -206,6 +206,7 @@ class SlotRecord:
     page_keys: tuple = ()          # page-table chain pinned at admission
     rematched: int = 0             # prompt tokens adopted mid-flight (re-match)
     recycled: int = 0              # ring pages recycled out of the window
+    slo_preempts: int = 0          # scheduler preempt-and-requeue demotions
 
 
 class RequestJournal:
@@ -274,6 +275,17 @@ class RequestJournal:
         bit-identical whatever recycling the replayed run performs
         (``record_token`` enforces that)."""
         self._records[request_id].recycled += int(n_pages)
+
+    def note_slo_preempt(self, request_id: str) -> None:
+        """Journal a scheduler-driven preempt-and-requeue (an SLO-busting
+        request demoted to the back of its engine's queue). A lifetime
+        count — unlike the per-admission page fields it survives
+        re-admission, so replay audits how often the scheduler bounced a
+        request. The demotion changes *when* the tokens re-emerge, never
+        what they are: replay after an SLO preemption runs through the
+        same ``open`` → ``record_token`` path as a full ``preempt()``,
+        and the divergence cross-check holds as usual."""
+        self._records[request_id].slo_preempts += 1
 
     def record_token(self, request_id: str, token: int) -> None:
         rec = self._records[request_id]

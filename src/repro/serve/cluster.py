@@ -18,6 +18,15 @@ What the :class:`ServeCluster` arbitrates:
   grants waits for the next round, so a down-weighted tenant's burst
   admits at a bounded rate instead of starving its peers' share of the
   power/pool budget. Engine order rotates per step so ties break fairly.
+* **SLO-aware scheduling (opt-in via** :class:`SchedPolicy` **).** The
+  ``"drr"`` scheduler replaces flat per-round grants with deficit-weighted
+  round-robin over each engine's actual :meth:`step_cost` — lightly loaded
+  tenants bank credit and admit; saturated ones wait. ``shed_busted``
+  drops queue heads that have already blown their TTFT target (open-loop
+  overload serves *fresh* work instead of a stale backlog), and
+  ``preempt_busted`` demotes decoding requests past their end-to-end
+  deadline to the back of the queue — they replay bit-identically from
+  the journal, so SLO enforcement never changes any request's tokens.
 * **Power-budget backpressure.** Before an engine admits into a slot, the
   cluster checks whether waking that slot's memory bank would exceed the
   :class:`PowerBudget`. If it would, the admission *stalls* (the request
@@ -64,11 +73,11 @@ from repro.core.power import PowerState
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.runtime.ft import ClusterJournal
-from repro.serve.engine import ContinuousBatchingEngine, Request
+from repro.serve.engine import SHED, ContinuousBatchingEngine, Request
 from repro.serve.paged import PagePool, pool_signature
 from repro.serve.pages import PageTable
 
-__all__ = ["PowerBudget", "ServeCluster", "awake_banks"]
+__all__ = ["PowerBudget", "SchedPolicy", "ServeCluster", "awake_banks"]
 
 
 def awake_banks(platform) -> int:
@@ -122,6 +131,53 @@ class PowerBudget:
         return False
 
 
+@dataclasses.dataclass(frozen=True)
+class SchedPolicy:
+    """How the cluster arbitrates admission and slot tenure.
+
+    ``scheduler`` selects the grant discipline per scheduling round:
+
+    * ``"wrr"`` (default) — flat weighted round-robin: each tenant gets
+      ``weight`` admission grants per round, regardless of how much work
+      its slots already carry. This is the PR 4 behaviour.
+    * ``"drr"`` — deficit-weighted round-robin over
+      :meth:`~repro.serve.engine.ContinuousBatchingEngine.step_cost`:
+      each round a tenant banks ``max(0, quantum·weight − step_cost())``
+      *token* credits (a loaded engine accrues slowly, an idle one fast),
+      capped at ``deficit_cap·quantum·weight``, and an admission charges
+      the request's full token cost (prompt + max_new_tokens). Admission
+      pace thus follows committed device work, not just slot counts.
+
+    The two SLO levers are independent of the grant discipline:
+
+    * ``shed_busted`` — latency-SLO admission control: a queue head whose
+      TTFT target is already blown is dropped (shed) instead of admitted;
+      under overload, capacity goes to requests that can still meet their
+      SLO. A request the scheduler itself previously demoted is exempt —
+      it already holds journal state and must finish.
+    * ``preempt_busted`` — preempt-and-requeue of SLO-busting long tails:
+      a decoding request whose :meth:`~repro.serve.metrics.SLO.deadline`
+      has passed while peers queue is evicted and re-queued at the *back*
+      (at most once per request; journal replay reproduces its tokens
+      bit-for-bit), freeing the slot for salvageable work.
+    """
+
+    scheduler: str = "wrr"
+    quantum: int = 16        # drr: token credits banked per weight per round
+    deficit_cap: int = 4     # drr: max rounds of unspent credit banked
+    shed_busted: bool = False
+    preempt_busted: bool = False
+
+    def __post_init__(self):
+        if self.scheduler not in ("wrr", "drr"):
+            raise ValueError(f"unknown scheduler {self.scheduler!r} "
+                             "(one of 'wrr', 'drr')")
+        if self.quantum < 1:
+            raise ValueError("quantum must be >= 1 token")
+        if self.deficit_cap < 1:
+            raise ValueError("deficit_cap must be >= 1 round")
+
+
 class ServeCluster:
     """N continuous-batching engines over one pool, table, and platform.
 
@@ -139,7 +195,8 @@ class ServeCluster:
                  platform=None, clock: Callable[[], float] = lambda: 0.0,
                  capacity_pages: int | None = None,
                  power_budget: PowerBudget | None = None,
-                 journal: ClusterJournal | None = None):
+                 journal: ClusterJournal | None = None,
+                 policy: SchedPolicy | None = None):
         from repro.core.platform import Platform, XHeepConfig
 
         owns_platform = platform is None
@@ -159,14 +216,18 @@ class ServeCluster:
                             else pool_pages),
             on_evict=self.pool.release)
         self.journal = journal or ClusterJournal()
+        self.policy = policy or SchedPolicy()
         self.engines: dict[str, ContinuousBatchingEngine] = {}
         self._weights: dict[str, int] = {}
         self._grants: dict[str, int] = {}
+        self._deficit: dict[str, float] = {}  # drr: banked token credits
         self._ns_identity: dict[str, tuple] = {}
         self._rr_offset = 0
         self.steps = 0
         self.power_stalls = 0          # admissions stalled by the budget
         self.wrr_stalls = 0            # admissions deferred to the next round
+        self.sheds = 0                 # SLO-busted heads dropped at admission
+        self.slo_preempts = 0          # SLO-busting tails demoted to the back
         self.reclaims: dict[str, int] = {}   # namespace -> pages reclaimed
         if owns_platform:
             # our own platform: the idle bank pool starts gated (same rule
@@ -225,6 +286,7 @@ class ServeCluster:
             **engine_kwargs)
         self.engines[name] = eng
         self._weights[name] = weight
+        self._deficit[name] = 0.0
         return eng
 
     def submit(self, name: str, request: Request) -> bool:
@@ -234,13 +296,32 @@ class ServeCluster:
 
     # -- arbitration -----------------------------------------------------------
 
-    def _admission_hook(self, eng, slot_idx: int, request) -> bool | None:
-        """Per-admission veto, called from inside each engine's step: spend
-        one WRR grant and check the power budget for the slot's bank.
-        Returns True to admit, False to skip this slot (power vetoes are
-        per-slot — another slot's bank may already be awake), or None to
-        end the engine's admission scan (a spent grant is engine-global)."""
-        if self._grants.get(eng.name, 0) <= 0:
+    def _admission_hook(self, eng, slot_idx: int, request):
+        """Per-admission veto, called from inside each engine's step:
+        latency-SLO admission control first (``SHED`` drops a head that
+        can no longer meet its TTFT target), then the scheduler budget
+        (one WRR grant, or the request's token cost against the engine's
+        DRR deficit), then the power budget for the slot's bank. Returns
+        True to admit, False to skip this slot (power vetoes are per-slot
+        — another slot's bank may already be awake), None to end the
+        engine's admission scan (a spent budget is engine-global), or
+        ``SHED`` to drop the head outright."""
+        if self.policy.shed_busted:
+            slo = getattr(request, "slo", None)
+            # a request the scheduler itself demoted already holds journal
+            # state and must finish — shedding applies to fresh heads only
+            if (slo is not None and slo.ttft is not None
+                    and request.slo_preempts == 0
+                    and request.arrival_time is not None
+                    and self.clock() - request.arrival_time > slo.ttft):
+                self.sheds += 1
+                return SHED
+        if self.policy.scheduler == "drr":
+            cost = len(request.prompt) + request.max_new_tokens
+            if self._deficit.get(eng.name, 0.0) < cost:
+                self.wrr_stalls += 1
+                return None
+        elif self._grants.get(eng.name, 0) <= 0:
             self.wrr_stalls += 1
             return None
         bank = eng._slot_bank[slot_idx]
@@ -248,7 +329,11 @@ class ServeCluster:
                 self.platform, bank):
             self.power_stalls += 1
             return False
-        self._grants[eng.name] -= 1
+        if self.policy.scheduler == "drr":
+            self._deficit[eng.name] -= (len(request.prompt)
+                                        + request.max_new_tokens)
+        else:
+            self._grants[eng.name] -= 1
         return True
 
     def _reclaim(self, eng) -> None:
@@ -275,13 +360,56 @@ class ServeCluster:
         """True while any tenant has queued or in-flight work."""
         return any(e.busy for e in self.engines.values())
 
+    def _preempt_busted(self) -> None:
+        """SLO enforcement: demote any decoding request that has already
+        blown past its end-to-end deadline while fresh work waits in its
+        engine's queue. The long tail goes to the *back* of the queue (it
+        already missed; the fresh head may still make its target) and is
+        replayed bit-identically from the journal when re-admitted. At
+        most once per request — a second demotion could livelock."""
+        for name, eng in self.engines.items():
+            if not eng.queue:
+                continue
+            now = self.clock()
+            for i, slot in enumerate(eng.slots):
+                if slot is None or slot.prefilling or slot.produced < 1:
+                    continue
+                req = slot.request
+                slo = getattr(req, "slo", None)
+                if (slo is None or req.slo_preempts > 0
+                        or req.arrival_time is None
+                        or now <= slo.deadline(req.arrival_time,
+                                               req.max_new_tokens)):
+                    continue
+                if eng.preempt_slot(i, front=False) is not None:
+                    req.slo_preempts += 1
+                    self.slo_preempts += 1
+                    self.journal.journal(name).note_slo_preempt(req.id)
+
     def step(self) -> bool:
-        """One scheduling round: refill every tenant's admission grants,
-        then advance each engine one step (order rotates per round).
-        Returns False when every tenant is idle; raises when queued work
-        exists but the power budget lets nothing run (a budget deadlock —
-        stalling forever would spin silently)."""
-        self._grants = dict(self._weights)
+        """One scheduling round: preempt SLO-busted long tails (if the
+        policy says so), refill every tenant's admission budget — flat
+        WRR grants, or DRR deficits accumulated against each engine's
+        actual ``step_cost()`` — then advance each engine one step (order
+        rotates per round). Returns False when every tenant is idle;
+        raises when queued work exists but the power budget lets nothing
+        run (a budget deadlock — stalling forever would spin silently)."""
+        if self.policy.preempt_busted:
+            self._preempt_busted()
+        if self.policy.scheduler == "drr":
+            q = self.policy.quantum
+            for name, eng in self.engines.items():
+                if not eng.busy:
+                    # idle tenants bank no deficit: DRR shares the *busy*
+                    # period, it does not let an idle tenant hoard credit
+                    self._deficit[name] = 0.0
+                    continue
+                w = self._weights.get(name, 1)
+                gain = max(0.0, q * w - eng.step_cost())
+                cap = self.policy.deficit_cap * q * w
+                self._deficit[name] = min(cap, self._deficit[name] + gain)
+        else:
+            self._grants = dict(self._weights)
         names = list(self.engines)
         if names:
             off = self._rr_offset % len(names)
@@ -327,6 +455,9 @@ class ServeCluster:
             "steps": self.steps,
             "power_stalls": self.power_stalls,
             "wrr_stalls": self.wrr_stalls,
+            "scheduler": self.policy.scheduler,
+            "sheds": self.sheds,
+            "slo_preempts": self.slo_preempts,
             "reclaims": dict(self.reclaims),
             "awake_banks": self.awake_banks(),
             "pool": dict(self.pool.stats, pages=self.pool.n_pages,

@@ -257,19 +257,37 @@ def _slot_reset_fn():
     return _RESET_FN
 
 
+# Admission-hook verdict telling the engine to drop the queue head
+# entirely (latency-SLO admission control: the request can no longer meet
+# its SLO, so serving it would waste capacity). Distinct from False (skip
+# this slot) and None (stop the admission scan) — see ``_place``.
+SHED = object()
+
+
 @dataclasses.dataclass
 class Request:
-    """One generation request. ``tokens`` is filled in by the engine."""
+    """One generation request. ``tokens`` is filled in by the engine.
+
+    ``slo`` (optional) is a latency target the scheduler and the metrics
+    layer read (see :class:`repro.serve.metrics.SLO`); the engine itself
+    never interprets it. ``first_token_time`` stamps the retire of the
+    request's first generated token (TTFT = that minus ``arrival_time``);
+    ``slo_preempts`` counts scheduler-driven preempt-and-requeue demotions
+    (see :meth:`ContinuousBatchingEngine.preempt_slot`).
+    """
 
     id: str
     prompt: Sequence[int]
     max_new_tokens: int
     on_complete: Callable[["Request"], None] | None = None
+    slo: Any = None
     # engine-written bookkeeping
     tokens: list = dataclasses.field(default_factory=list)
     arrival_time: float | None = None
     admit_time: float | None = None
+    first_token_time: float | None = None
     finish_time: float | None = None
+    slo_preempts: int = 0
 
     def __post_init__(self):
         self.prompt = tuple(int(t) for t in self.prompt)
@@ -456,7 +474,6 @@ class ContinuousBatchingEngine:
         self.slots: list[_Slot | None] = [None] * slots
         self._dirty: set[int] = set()          # lanes holding a dead cache page
         self._seq = 0
-        self._claims: dict[tuple, _Slot] = {}  # page key -> computing slot
         self._pending: tuple[_StepMeta, Any] | None = None  # unretired step
         self._prev_nxt = None                  # device argmax of pending step
 
@@ -472,6 +489,7 @@ class ContinuousBatchingEngine:
         self.pages_recycled = 0                # ring entries reused (windowed)
         self.completed: list[Request] = []
         self.rejected = 0
+        self.shed = 0                          # queue heads dropped by the hook
 
         if self.paged:
             self._pstep = paged_step_fn(cfg, self._window)
@@ -534,24 +552,35 @@ class ContinuousBatchingEngine:
         free = [i for i in range(self.n_slots) if self.slots[i] is None]
         while self.queue and free:
             i = self._place(free)
+            if i is SHED:
+                # latency-SLO admission control: the head can no longer
+                # meet its SLO, so the scheduler drops it instead of
+                # spending a slot on work that is already worthless
+                self.queue.popleft()
+                self.shed += 1
+                continue
             if i is None:
                 break        # head unplaceable: FIFO forbids skipping it
             free.remove(i)
             req = self.queue.popleft()              # FIFO — fairness invariant
             self._admit_into(i, req)
 
-    def _place(self, free: list[int]) -> int | None:
+    def _place(self, free: list[int]):
         """First free slot the scheduler lets the queue head into (None =
         stalled this step). The hook peeks, never pops: a veto leaves the
         request at the queue head so FIFO order survives the stall. A
         veto's scope is the hook's call: False is per-slot (a later free
         slot may sit on an already-awake bank and admit the same head at
         zero budget cost — and the vetoed slot stays available to the next
-        head); None is engine-global (no grant will appear mid-step)."""
+        head); None is engine-global (no grant will appear mid-step); the
+        ``SHED`` sentinel tells :meth:`_admit` to drop the head outright
+        (the one verdict that does pop — admission control, not a stall)."""
         if self._admission_hook is None:
             return free[0]
         for i in free:
             verdict = self._admission_hook(self, i, self.queue[0])
+            if verdict is SHED:
+                return SHED
             if verdict:
                 return i
             self.admission_stalls += 1
@@ -700,6 +729,8 @@ class ContinuousBatchingEngine:
             if was_prefilling and c == 0:
                 continue                   # stalled this step
             slot.fed += c
+            if self.paged:
+                self._recycle_dead(slot)   # window crossed: free dead blocks
             if was_prefilling:
                 self.prompt_tokens_processed += c
                 self._maybe_publish(i, slot)
@@ -762,8 +793,12 @@ class ContinuousBatchingEngine:
         vector and run everything that needed the token values."""
         meta, nxt = pending
         vals = np.asarray(jax.device_get(nxt)).reshape(-1)
+        now = self.clock()
         for i, slot in meta.emitted:
             tok = int(vals[i])
+            if slot.request.first_token_time is None:
+                slot.request.first_token_time = now   # TTFT stamp (at retire:
+                # the token is host-visible only once the transfer lands)
             slot.request.tokens.append(tok)
             self.journal.record_token(slot.request.id, tok)
             slot.next_token = tok
@@ -811,24 +846,46 @@ class ContinuousBatchingEngine:
             slot.blocks_covered = b + 1
 
     def _free_entry(self, slot: _Slot, b: int) -> None:
-        """Ring recycling: drop whatever older block occupies block ``b``'s
-        table entry. A private page returns to the pool's free list; an
-        adopted shared-prefix page is *disowned* — the slot's pool ref and
-        table pin are released, while the table's own residency keeps the
-        page warm for future admissions. No-op for non-windowed slots (the
-        full-width table never aliases two blocks onto one entry)."""
+        """Ring recycling backstop: drop whatever older block occupies
+        block ``b``'s table entry. Eager recycling (:meth:`_recycle_dead`)
+        normally frees dead blocks the moment they fall out of the window,
+        so this fires only for blocks an entry-reuse reaches first (e.g. a
+        re-match jump landing on an entry whose old block is still barely
+        in-window). No-op for non-windowed slots (the full-width table
+        never aliases two blocks onto one entry)."""
         if self._window is None:
             return
         width = self._np_slot
         for b_old in [o for o in slot.pages_by_block
                       if o % width == b % width and o != b]:
-            self._pool.release(slot.pages_by_block.pop(b_old))
-            key = slot.request.prompt[:(b_old + 1) * self._ps]
-            if key in slot.page_keys:
-                self.pages.release((key,), self.namespace)
-                slot.page_keys = tuple(k for k in slot.page_keys if k != key)
-            self.pages_recycled += 1
-            self.journal.note_recycle(slot.request.id, 1)
+            self._recycle_block(slot, b_old)
+
+    def _recycle_dead(self, slot: _Slot) -> None:
+        """Eager window recycling: free (or disown) every block whose
+        positions fall wholly below the slot's attention window, the
+        moment ``fed`` crosses the block boundary — a slot that then
+        stalls (dedup wait, scheduler preemption) holds no dead pages
+        while its peers fight for the shared free list. Pool occupancy
+        drops immediately at the crossing instead of lazily at the ring
+        entry's next reuse."""
+        if self._window is None or not slot.pages_by_block:
+            return
+        first_needed = max(0, slot.fed + 1 - self._window) // self._ps
+        for b_old in [b for b in slot.pages_by_block if b < first_needed]:
+            self._recycle_block(slot, b_old)
+
+    def _recycle_block(self, slot: _Slot, b_old: int) -> None:
+        """Release one out-of-window block: a private page returns to the
+        pool's free list; an adopted shared-prefix page is *disowned* —
+        the slot's pool ref and table pin are released, while the table's
+        own residency keeps the page warm for future admissions."""
+        self._pool.release(slot.pages_by_block.pop(b_old))
+        key = slot.request.prompt[:(b_old + 1) * self._ps]
+        if key in slot.page_keys:
+            self.pages.release((key,), self.namespace)
+            slot.page_keys = tuple(k for k in slot.page_keys if k != key)
+        self.pages_recycled += 1
+        self.journal.note_recycle(slot.request.id, 1)
 
     def _try_rematch(self, slot: _Slot) -> None:
         """Mid-flight prefix re-match: adopt a sibling's freshly published
@@ -862,6 +919,7 @@ class ContinuousBatchingEngine:
         slot.page_keys += tuple(k for k, _ in ext)
         slot.blocks_covered = max(slot.blocks_covered, m // ps)
         slot.fed = m
+        self._recycle_dead(slot)           # the jump may strand dead blocks
         slot.next_token = prompt[m]
         self.prompt_tokens_reused += adopted
         self.rematches += 1
@@ -871,9 +929,13 @@ class ContinuousBatchingEngine:
     def _stalled(self, slot: _Slot) -> bool:
         """Dedup of concurrent identical cold prefills: if another live slot
         already claimed the page this slot would compute next, wait (feed
-        nothing this step) and adopt the page when it publishes. Claims are
-        per-page and dropped the moment the claimant crosses the boundary,
-        so a waiter never outlives its claimant's current page."""
+        nothing this step) and adopt the page when it publishes. Claims
+        live in the page table's claim registry (keyed by namespace, like
+        the pages themselves), so the claimant may belong to *any* engine
+        sharing the table — two replicas bursting the same cold prefix
+        dedup across engines, not just across one engine's slots. Claims
+        are per-page and dropped the moment the claimant crosses the
+        boundary, so a waiter never outlives its claimant's current page."""
         prompt = slot.request.prompt
         ps = self.pages.page_size
         boundary = (slot.fed // ps + 1) * ps
@@ -882,21 +944,24 @@ class ContinuousBatchingEngine:
         key = prompt[:boundary]
         if self.pages.has(key, self.namespace):
             return False                   # resident: re-match handles it
-        claimant = self._claims.get(key)
-        if claimant is not None and claimant is not slot:
-            alive = any(s is claimant for s in self.slots)
-            if alive and claimant.prefilling:
+        claimant = self.pages.claimant(key, self.namespace)
+        if claimant is not None and claimant[1] is not slot:
+            c_eng, c_slot = claimant
+            alive = any(s is c_slot for s in c_eng.slots)
+            if alive and c_slot.prefilling:
                 return True
-            self._claims.pop(key, None)    # stale claim: steal it
-        self._claims[key] = slot
+            self.pages.unclaim(key, self.namespace)   # stale claim: steal it
+        self.pages.claim(key, (self, slot), self.namespace)
         if key not in slot.claims:
             slot.claims.append(key)
         return False
 
     def _drop_claims(self, slot: _Slot) -> None:
-        for key in slot.claims:
-            if self._claims.get(key) is slot:
-                del self._claims[key]
+        if self.pages is not None:
+            for key in slot.claims:
+                claimant = self.pages.claimant(key, self.namespace)
+                if claimant is not None and claimant[1] is slot:
+                    self.pages.unclaim(key, self.namespace)
         slot.claims = []
 
     # -- lane-backend plumbing -----------------------------------------------
@@ -925,7 +990,7 @@ class ContinuousBatchingEngine:
         if fed % self.pages.page_size != 0:
             return
         key = slot.request.prompt[:fed]
-        self._claims.pop(key, None)        # computed: the claim is moot
+        self.pages.unclaim(key, self.namespace)   # computed: the claim is moot
         if not self.pages.wants(key, self.namespace):
             return
         if self.paged:
@@ -988,9 +1053,37 @@ class ContinuousBatchingEngine:
         requeued = [s.request for _, s in inflight]
         for req in requeued:
             req.tokens = []
-            req.admit_time = req.finish_time = None
+            req.admit_time = req.first_token_time = req.finish_time = None
         self.queue.extendleft(reversed(requeued))
         return requeued
+
+    def preempt_slot(self, i: int, *, front: bool = True) -> Request | None:
+        """Preempt one slot: evict lane ``i`` and re-queue its request —
+        at the queue front (default, preserving FIFO order like
+        :meth:`preempt`) or at the back (``front=False``, the scheduler's
+        demote-a-tail move: an SLO-busting request gives up its slot and
+        finishes after the salvageable work). Replay runs through the
+        same journal machinery as :meth:`preempt`, so the requeued
+        request's tokens are reproduced bit-for-bit; an in-flight async
+        step is retired first, seeding the journal's divergence
+        cross-check. Returns the requeued request, or None when the slot
+        is empty (possibly because the flush just completed it)."""
+        if self._pending is not None:
+            self._retire(self._pending)
+            self._pending = None
+            self._prev_nxt = None
+        slot = self.slots[i]
+        if slot is None:
+            return None
+        self._evict(i)
+        req = slot.request
+        req.tokens = []
+        req.admit_time = req.first_token_time = req.finish_time = None
+        if front:
+            self.queue.appendleft(req)
+        else:
+            self.queue.append(req)
+        return req
 
     # -- convenience ----------------------------------------------------------
 
@@ -1070,6 +1163,7 @@ class ContinuousBatchingEngine:
             "rematched_tokens": self.rematched_tokens,
             "completed": len(self.completed),
             "rejected": self.rejected,
+            "shed": self.shed,
             "queued": len(self.queue),
             "active": self.active,
         }

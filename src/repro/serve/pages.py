@@ -127,6 +127,12 @@ class PageTable:
         # in the module docstring.
         self.on_evict = on_evict
         self._pages: dict[tuple[str, tuple], Page] = {}
+        # cold-prefill dedup claims: (ns, key) -> opaque owner token.
+        # Table-level (not engine-local) so that two engines sharing the
+        # table — replicas of one model in one namespace — dedup identical
+        # concurrent cold prefills across engines: the later slot stalls
+        # on the earlier engine's claim and adopts the published page.
+        self._claims: dict[tuple[str, tuple], Any] = {}
         self._tick = 0
         self._next_bank = 0
         self.stats = {
@@ -227,6 +233,31 @@ class PageTable:
                 raise ValueError(
                     f"page {key!r} (ns={ns!r}) released more than acquired")
             page.refs -= 1
+
+    # -- cold-prefill dedup claims -------------------------------------------
+
+    def claim(self, key: Sequence[int], owner: Any, ns: str = "") -> None:
+        """Register ``owner`` as the party currently computing page
+        ``key`` in ``ns``. Owners are opaque to the table (the engine
+        passes an ``(engine, slot)`` pair); claims are advisory dedup
+        state, not residency — they hold no refcounts and survive no
+        publication (:meth:`unclaim` or a fresh :meth:`claim` replaces
+        them). Table-level so claims are visible across every engine
+        sharing the table."""
+        self._claims[(ns, tuple(key))] = owner
+
+    def claimant(self, key: Sequence[int], ns: str = "") -> Any:
+        """The current claim owner for page ``key`` in ``ns`` (None when
+        unclaimed). Pure query; staleness is the caller's judgement —
+        the table cannot tell a live claimant from a dead one."""
+        return self._claims.get((ns, tuple(key)))
+
+    def unclaim(self, key: Sequence[int], ns: str = "") -> None:
+        """Drop the claim on page ``key`` in ``ns`` (no-op when
+        unclaimed) — fired when the page publishes (claim moot), when the
+        claimant abandons the prefill, or when a waiter steals a stale
+        claim."""
+        self._claims.pop((ns, tuple(key)), None)
 
     def note_cow(self, n_pages: int) -> None:
         """Record that a slot materialised its private copy of ``n_pages``

@@ -26,6 +26,13 @@ shared pages). For a multi-model cluster, tag each arrival with its
 target engine (:func:`tag_engine`) and drive the merged trace through
 :class:`ClusterSimulator` — several engines, one fake clock, one report.
 
+Traces may also be *lazy*: both simulators accept any iterator of
+:class:`Arrival` (e.g. :func:`repro.serve.loadgen.open_loop_trace`) and
+pull from it one arrival at a time, so a 10⁵–10⁶-request open-loop trace
+never materialises in memory. Lazy traces must already be time-ordered
+(generators own their ordering); materialised sequences are stable-sorted
+by the simulator as before.
+
 Invariants the harness preserves: no wall clock or randomness anywhere, so
 every report is exactly reproducible; same-time arrivals are delivered in
 trace order (FIFO admission is observable end-to-end); and a reused engine
@@ -34,9 +41,9 @@ reports per-run deltas, never cumulative lifetime counters.
 
 from __future__ import annotations
 
-import collections
+import collections.abc
 import dataclasses
-from typing import Sequence
+from typing import Iterable, Sequence
 
 from repro.serve.engine import ContinuousBatchingEngine, Request
 
@@ -113,6 +120,79 @@ def shared_prefix_requests(n: int, *, prefix_len: int = 64,
     ]
 
 
+class _TraceFeed:
+    """Uniform, lazily-consumed view over an arrival trace.
+
+    A materialised sequence is validated up front and stable-sorted by
+    time (same-time arrivals keep trace order — the FIFO contract). Any
+    other iterable is consumed one arrival at a time — an open-loop
+    generator of 10⁶ arrivals costs O(1) memory — and must already be
+    time-ordered: the feed enforces nondecreasing times and validates
+    each arrival as it surfaces, so a bad engine tag raises a clear
+    ``ValueError`` naming the arrival instead of a bare ``KeyError``
+    deep inside the cluster.
+    """
+
+    def __init__(self, trace: Iterable[Arrival], *,
+                 engines: collections.abc.Set | None = None):
+        self._engines = engines
+        self._lazy = not isinstance(trace, collections.abc.Sequence)
+        if self._lazy:
+            self._it = iter(trace)
+        else:
+            arrivals = list(trace)
+            for arr in arrivals:
+                self._validate(arr)
+            arrivals.sort(key=lambda a: a.time)      # stable: ties keep order
+            self._it = iter(arrivals)
+        self._last = float("-inf")
+        self.head: Arrival | None = None
+        self._advance()
+
+    def _validate(self, arr: Arrival) -> None:
+        if self._engines is None or arr.engine in self._engines:
+            return
+        if arr.engine is None:
+            raise ValueError(
+                f"untagged arrival {arr.request.id!r}: cluster traces "
+                "route by engine name (see tag_engine)")
+        raise ValueError(
+            f"arrival {arr.request.id!r} targets unknown engine "
+            f"{arr.engine!r} (cluster engines: {sorted(self._engines)}; "
+            "see tag_engine)")
+
+    def _advance(self) -> None:
+        arr = next(self._it, None)
+        if arr is not None and self._lazy:
+            if arr.time < self._last:
+                raise ValueError(
+                    f"lazy trace ran backwards: arrival "
+                    f"{arr.request.id!r} at t={arr.time} after t="
+                    f"{self._last} (generator traces must be "
+                    "nondecreasing; materialise a list to let the "
+                    "simulator sort)")
+            self._validate(arr)
+        if arr is not None:
+            self._last = arr.time
+        self.head = arr
+
+    def pop(self) -> Arrival:
+        """Return the current head and pull the next arrival forward."""
+        arr = self.head
+        self._advance()
+        return arr
+
+    def __bool__(self) -> bool:
+        return self.head is not None
+
+    def __getitem__(self, i: int) -> Arrival:
+        # head-only indexing keeps the `sim.pending[0].time` drive-by-hand
+        # idiom working on lazy feeds (only the head is materialised)
+        if i != 0 or self.head is None:
+            raise IndexError("trace feed exposes only its head arrival")
+        return self.head
+
+
 @dataclasses.dataclass
 class SimReport:
     elapsed: float                    # fake-clock span of the run
@@ -143,9 +223,10 @@ class Simulator:
     ``dispatch_time=0.0`` reproduces the PR 1/PR 2 accounting exactly.
     """
 
-    def __init__(self, engine: ContinuousBatchingEngine, trace: Sequence[Arrival],
-                 clock: FakeClock, *, step_time: float = 1.0,
-                 dispatch_time: float = 0.0, sequential: bool = False):
+    def __init__(self, engine: ContinuousBatchingEngine,
+                 trace: Iterable[Arrival], clock: FakeClock, *,
+                 step_time: float = 1.0, dispatch_time: float = 0.0,
+                 sequential: bool = False):
         if engine.clock is not clock:
             raise ValueError("engine must share the simulator's clock")
         if step_time < 0 or dispatch_time < 0:
@@ -156,16 +237,14 @@ class Simulator:
         self.dispatch_time = dispatch_time
         self.sequential = sequential
         self._device_free = clock.t          # device pipeline: busy-until
-        self.pending = collections.deque(
-            sorted(trace, key=lambda a: (a.time,)))
-        # stable sort keeps same-time arrivals in trace order (FIFO semantics)
+        self.pending = _TraceFeed(trace)
 
     def _deliver_due(self) -> None:
         eng = self.engine
         while self.pending and self.pending[0].time <= self.clock.t:
             if self.sequential and eng.busy:
                 break                    # hold traffic until the engine drains
-            arr = self.pending.popleft()
+            arr = self.pending.pop()
             arr.request.arrival_time = arr.time
             eng.submit(arr.request)
             if self.sequential:
@@ -230,6 +309,7 @@ class ClusterSimReport:
     tokens_generated: int             # summed over every engine
     completed: dict                   # engine name -> requests, finish order
     rejected: int                     # summed engine backpressure rejections
+    shed: int = 0                     # summed SLO-busted heads dropped
 
     @property
     def throughput(self) -> float:
@@ -239,39 +319,41 @@ class ClusterSimReport:
 
 class ClusterSimulator:
     """Drive a :class:`~repro.serve.cluster.ServeCluster` from one merged,
-    engine-tagged arrival trace on one fake clock.
+    engine-tagged arrival trace (list or lazy generator) on one fake clock.
 
     Cost model: the cluster's engines are modelled as concurrently running
     accelerator tiles on one platform (the X-HEEP picture), so one cluster
     step — every busy engine advancing one batched launch — charges
-    ``dispatch_time + step_time`` once. Cross-engine prefix reuse therefore
-    shows up as *fewer cluster steps* to drain the same trace, exactly like
-    within-engine reuse does for a single engine. The model is synchronous;
-    async engines still work but are charged the sync cost.
+    ``dispatch_time`` once, plus device time per the engine's own dispatch
+    mode. A synchronous engine holds the round open for its full
+    ``step_time``; an ``async_dispatch`` engine carries its own
+    device-busy-until pipeline (exactly the :class:`Simulator` depth-1
+    double-buffer model, one pipeline per engine), so the round only waits
+    for its *previous* launch and its device time overlaps the next
+    round's host work. Cross-engine prefix reuse therefore shows up as
+    *fewer cluster steps* to drain the same trace, and async tenants are
+    charged their overlapped cost, not the sync one. With only sync
+    engines this reproduces the original ``dispatch_time + step_time``
+    per-round accounting bit-for-bit.
     """
 
-    def __init__(self, cluster, trace: Sequence[Arrival], clock: FakeClock,
+    def __init__(self, cluster, trace: Iterable[Arrival], clock: FakeClock,
                  *, step_time: float = 1.0, dispatch_time: float = 0.0):
         if cluster.clock is not clock:
             raise ValueError("cluster must share the simulator's clock")
         if step_time < 0 or dispatch_time < 0:
             raise ValueError("step/dispatch times cannot be negative")
-        for arr in trace:
-            if arr.engine is None:
-                raise ValueError(
-                    f"untagged arrival {arr.request.id!r}: cluster traces "
-                    "route by engine name (see tag_engine)")
+        # engine tags are validated against the cluster's tenant set — a
+        # sequence trace entirely at construction, a lazy one per arrival
         self.cluster = cluster
         self.clock = clock
         self.step_time = step_time
         self.dispatch_time = dispatch_time
-        self.pending = collections.deque(
-            sorted(trace, key=lambda a: a.time))
-        # stable sort keeps same-time arrivals in trace order (FIFO semantics)
+        self.pending = _TraceFeed(trace, engines=set(cluster.engines))
 
     def _deliver_due(self) -> None:
         while self.pending and self.pending[0].time <= self.clock.t:
-            arr = self.pending.popleft()
+            arr = self.pending.pop()
             arr.request.arrival_time = arr.time
             self.cluster.submit(arr.engine, arr.request)
 
@@ -284,11 +366,38 @@ class ClusterSimulator:
         tokens0 = {n: e.tokens_generated for n, e in cl.engines.items()}
         done0 = {n: len(e.completed) for n, e in cl.engines.items()}
         rejected0 = {n: e.rejected for n, e in cl.engines.items()}
+        shed0 = {n: e.shed for n, e in cl.engines.items()}
+        # per-engine device pipelines (device-busy-until timestamps)
+        dev_free = {n: self.clock.t for n in cl.engines}
+        steps_prev = {n: e.steps for n, e in cl.engines.items()}
         for _ in range(max_steps):
             self._deliver_due()
             if cl.busy:
+                pend_prev = {n: e._pending is not None
+                             for n, e in cl.engines.items()}
                 if cl.step():
-                    self.clock.advance(self.dispatch_time + self.step_time)
+                    dispatched = self.clock.t + self.dispatch_time
+                    round_end = dispatched
+                    for n, e in cl.engines.items():
+                        launched = e.steps > steps_prev[n]
+                        steps_prev[n] = e.steps
+                        if not getattr(e, "async_dispatch", False):
+                            if launched:       # sync: round holds for device
+                                dev_free[n] = dispatched + self.step_time
+                                round_end = max(round_end, dev_free[n])
+                        elif launched:
+                            # async: device starts once the dispatch and the
+                            # engine's previous step are both done; the host
+                            # only blocks on the *previous* step (depth-1)
+                            prev = dev_free[n]
+                            dev_free[n] = (max(dispatched, prev)
+                                           + self.step_time)
+                            round_end = max(round_end, prev)
+                        elif pend_prev[n] and e._pending is None:
+                            # flush-only: host blocked until the in-flight
+                            # launch finished on the device
+                            round_end = max(round_end, dev_free[n])
+                    self.clock.advance_to(round_end)
             elif self.pending:
                 # idle: jump to the next arrival instead of spinning
                 self.clock.advance_to(self.pending[0].time)
@@ -296,6 +405,8 @@ class ClusterSimulator:
                 break
         else:
             raise RuntimeError(f"simulation did not drain in {max_steps} steps")
+        if dev_free:
+            self.clock.advance_to(max(dev_free.values()))  # drain pipelines
         return ClusterSimReport(
             elapsed=self.clock.t - t0, steps=cl.steps - steps0,
             tokens_generated=sum(e.tokens_generated - tokens0[n]
@@ -303,4 +414,5 @@ class ClusterSimulator:
             completed={n: list(e.completed[done0[n]:])
                        for n, e in cl.engines.items()},
             rejected=sum(e.rejected - rejected0[n]
-                         for n, e in cl.engines.items()))
+                         for n, e in cl.engines.items()),
+            shed=sum(e.shed - shed0[n] for n, e in cl.engines.items()))

@@ -22,7 +22,12 @@ Checks, failing the build with a listing of every violation:
      leaf of the JSON rounded the same way — approximations written with
      one decimal (``~1.8×``) are deliberately exempt;
    * ``A vs B`` integer pairs on lines mentioning pages (the device-page
-     savings quotes) must both be integer leaves of the JSON.
+     savings quotes) must both be integer leaves of the JSON;
+   * attainment percentages (``68.2%``) on lines mentioning attainment
+     must equal a fractional leaf of the JSON scaled to percent, and
+     decimal figures on lines mentioning TTFT or goodput (``98.0``,
+     ``2.62``) must equal a leaf rounded to the quoted precision — the
+     open-loop SLO numbers stay as fresh as the speedups.
 """
 
 from __future__ import annotations
@@ -43,8 +48,9 @@ _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _EXTERNAL = ("http://", "https://", "mailto:")
 
 DOC_MODULES = (
-    "repro.serve.cluster", "repro.serve.engine", "repro.serve.paged",
-    "repro.serve.pages", "repro.serve.sim",
+    "repro.serve.cluster", "repro.serve.engine", "repro.serve.loadgen",
+    "repro.serve.metrics", "repro.serve.paged", "repro.serve.pages",
+    "repro.serve.sim",
     "repro.kernels.paged_attention.kernel",
     "repro.kernels.paged_attention.ops",
     "repro.kernels.paged_attention.ref",
@@ -55,6 +61,11 @@ BENCH_JSON = REPO / "BENCH_serve.json"
 # approximations like "~1.8×" are prose, not artifact numbers)
 _SPEEDUP = re.compile(r"(?<![\d.])(\d+\.\d{2})[×x]")
 _VS_PAIR = re.compile(r"\b(\d+) vs (\d+)\b")
+# "68.2%" on attainment lines; "98.0" / "2.62" on TTFT/goodput lines —
+# quoted at whatever precision, checked against the JSON leaf rounded the
+# same way (decimal quotes only: bare integers are prose, not artifacts)
+_PCT = re.compile(r"(?<![\d.])(\d+\.\d+)%")
+_DEC = re.compile(r"(?<![\d.])(\d+\.\d+)(?![\d.×x%])")
 
 
 def _doc_files() -> list[pathlib.Path]:
@@ -140,13 +151,31 @@ def check_bench_numbers() -> list[str]:
                         f"{rel}:{lineno}: quoted speedup {quote}× not in "
                         f"BENCH_serve.json (stale number? run `make "
                         f"bench-json` + `make bench-table`)")
-            if "page" in line.lower():
+            low = line.lower()
+            if "page" in low:
                 for a, b in _VS_PAIR.findall(line):
                     for n in (int(a), int(b)):
                         if n not in ints:
                             errors.append(
                                 f"{rel}:{lineno}: page count {n} (in "
                                 f"'{a} vs {b}') not in BENCH_serve.json")
+            if "attainment" in low:
+                for q in _PCT.findall(line):
+                    nd = len(q.split(".")[1])
+                    if float(q) not in {round(v * 100, nd) for v in leaves
+                                        if 0 <= v <= 1}:
+                        errors.append(
+                            f"{rel}:{lineno}: attainment {q}% not in "
+                            f"BENCH_serve.json (stale number? run `make "
+                            f"bench-json`)")
+            if "ttft" in low or "goodput" in low:
+                for q in _DEC.findall(line):
+                    nd = len(q.split(".")[1])
+                    if float(q) not in {round(v, nd) for v in leaves}:
+                        errors.append(
+                            f"{rel}:{lineno}: TTFT/goodput figure {q} not "
+                            f"in BENCH_serve.json (stale number? run `make "
+                            f"bench-json`)")
 
     import bench_table
 
