@@ -54,6 +54,8 @@ bench-json:
 	$(PY) benchmarks/serve_bench.py --slots 4 --kernel-bench --json --bench-json
 	$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
 		--open-loop --json --bench-json
+	$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
+		--open-loop-rate 40 --sampling --json --bench-json
 
 # fast-tier open-loop smoke: a seeded 1k-request trace through the full
 # SLO-aware pipeline (loadgen -> cluster -> metrics), < 10 s on CPU

@@ -30,6 +30,13 @@ overlaps them (see :class:`repro.serve.sim.Simulator`). Modes:
   TTFT shedding + deadline preemption) vs flat WRR, compared on goodput,
   p50/p99 TTFT, per-token latency, and SLO attainment. Two same-seed SLO
   runs are asserted bit-identical before any number is reported.
+* ``--sampling [N]`` — deterministic stochastic sampling: N open-loop
+  arrivals (default 2000) whose tenants carry per-request seeded
+  :class:`~repro.serve.sampling.SamplingParams` through the full
+  SLO-aware policy (shedding + preempt-and-requeue). Two same-seed
+  sampled runs are asserted bit-identical, sampled streams must diverge
+  from a greedy drive of the byte-identical arrivals, and the greedy
+  control tenant's streams must not.
 * ``--multi-model`` — the PR 4 cluster workload: two models / three
   engines (two replicas of one model sharing a namespace, plus a second
   model) on one ``ServeCluster`` — one shared ``PagePool``/``PageTable``
@@ -601,6 +608,190 @@ def run_open_loop(args) -> tuple[dict, float]:
     return out, gain
 
 
+def run_sampling(args) -> tuple[dict, float]:
+    """Deterministic stochastic sampling at open-loop scale.
+
+    One engine under the full SLO-aware cluster policy serves a bursty
+    open-loop mix of three tenants — one hot (temperature + top-k +
+    top-p), one nucleus-only, one greedy control — at an offered load
+    far above capacity, so the run exercises sampling through queue
+    buildup, shedding, and SLO preempt-and-requeue. Three drives over the
+    *byte-identical* arrival sequence (materialised once, fresh Request
+    objects per drive):
+
+    * sampled, twice: the per-request journaled PRNG chains must make the
+      two runs bit-identical — reports, metric summaries, every token.
+    * greedy (the same requests with ``sampling`` stripped): the sampled
+      tenants' streams must actually diverge from greedy decode, and the
+      greedy control tenant's streams must be bit-identical across the
+      sampled and stripped drives (a neighbour's PRNG never leaks).
+
+    Run with ``--open-loop-rate 40`` (the ``make bench-json`` line): still
+    far above the three engines' capacity, but admitting enough of the
+    tight-TPOT tenant's long decodes that deadline preempt-and-requeue
+    demonstrably engages — at rate 100 nearly everything is rejected at
+    the queue and nothing lives long enough to be demoted.
+    """
+    from repro.serve.cluster import SchedPolicy, ServeCluster
+    from repro.serve.loadgen import TenantSpec, open_loop_trace
+    from repro.serve.metrics import SLO, ServeMetrics
+    from repro.serve.sampling import SamplingParams
+    from repro.serve.sim import Arrival, ClusterSimulator
+
+    n, rate = args.sampling, args.open_loop_rate
+    cfg_a = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    cfg_b = (configs.smoke(args.arch_b) if args.smoke
+             else configs.get(args.arch_b))
+    params_a = P.init_tree(registry.decls(cfg_a), jax.random.key(args.seed))
+    params_b = P.init_tree(registry.decls(cfg_b),
+                           jax.random.key(args.seed + 1))
+
+    # the run_open_loop topology — two replicas plus a preemptable
+    # long-output tenant — with sampling attached: hot sampling on rep-a,
+    # greedy control on rep-b (same model, same namespace), nucleus
+    # sampling on the tight-TPOT tenant whose tails get demoted
+    hot = SamplingParams(temperature=0.8, top_k=40, top_p=0.95)
+    nucleus = SamplingParams(temperature=1.0, top_p=0.9)
+    tenants = [
+        TenantSpec(engine="rep-a", share=1.0, prompt_len=(6, 18),
+                   new_tokens=(4, 10), prefix_len=8, prefix_seed=7,
+                   slo=SLO(ttft=25.0, tpot=4.0), sampling=hot),
+        TenantSpec(engine="rep-b", share=1.0, prompt_len=(6, 18),
+                   new_tokens=(4, 10), prefix_len=8, prefix_seed=7,
+                   slo=SLO(ttft=25.0, tpot=4.0)),
+        TenantSpec(engine="alt", share=0.5, prompt_len=(4, 12),
+                   new_tokens=(16, 28), slo=SLO(ttft=25.0, tpot=1.0),
+                   sampling=nucleus),
+    ]
+    max_len = {"rep-a": 32, "rep-b": 32, "alt": 48}
+    ps = 8
+    pool_pages = sum(args.slots * -(-m // ps) for m in max_len.values()) + 24
+    # materialise the arrival sequence once; every drive rebuilds fresh
+    # Request objects from it (requests are engine-mutated, and the greedy
+    # drive must see the very same prompts with only `sampling` stripped)
+    base = [(a.time, a.request.id, tuple(a.request.prompt),
+             a.request.max_new_tokens, a.request.slo, a.request.sampling,
+             a.engine)
+            for a in open_loop_trace(tenants, n_requests=n, rate=rate,
+                                     seed=args.seed,
+                                     process=args.open_loop_process)]
+    sampled_ids = {rid for _, rid, _, _, _, sp, _ in base if sp is not None}
+
+    def drive(strip):
+        clock = FakeClock()
+        cluster = ServeCluster(pool_pages=pool_pages, page_size=ps,
+                               clock=clock,
+                               policy=SchedPolicy(scheduler="drr",
+                                                  shed_busted=True,
+                                                  preempt_busted=True))
+        for name, cfg, params, ns in (
+                ("rep-a", cfg_a, params_a, cfg_a.name),
+                ("rep-b", cfg_a, params_a, cfg_a.name),
+                ("alt", cfg_b, params_b, cfg_b.name)):
+            cluster.add_engine(cfg, params, name=name, namespace=ns,
+                               slots=args.slots, max_len=max_len[name],
+                               prefill_chunk=args.prefill_chunk,
+                               queue_capacity=args.queue_capacity)
+        trace = (Arrival(t, Request(id=rid, prompt=list(p),
+                                    max_new_tokens=m, slo=slo,
+                                    sampling=None if strip else sp), e)
+                 for t, rid, p, m, slo, sp, e in base)
+        sim = ClusterSimulator(cluster, trace, clock,
+                               step_time=args.step_time,
+                               dispatch_time=args.dispatch_time)
+        w0 = time.perf_counter()
+        report = sim.run(max_steps=5_000_000)
+        wall = time.perf_counter() - w0
+        metrics = ServeMetrics()
+        tokens, sampled_served = {}, 0
+        for eng in cluster.engines.values():
+            metrics.observe_all(eng.completed)
+            tokens.update((r.id, tuple(r.tokens)) for r in eng.completed)
+            sampled_served += eng.sampled_requests
+        return (report, metrics.summary(elapsed=report.elapsed),
+                tokens, cluster, sampled_served, wall)
+
+    def digest(report, summary, tokens):
+        return (report.elapsed, report.steps, report.tokens_generated,
+                report.rejected, report.shed, summary, tokens)
+
+    rep1, sum1, tok1, cl1, samp1, wall1 = drive(strip=False)
+    rep2, sum2, tok2, _, _, _ = drive(strip=False)
+    if digest(rep1, sum1, tok1) != digest(rep2, sum2, tok2):
+        raise AssertionError(
+            "sampled open-loop run is not deterministic: two same-seed "
+            "runs diverged — the journaled per-request PRNG chains must "
+            "make sampling bit-reproducible")
+    repg, sumg, tokg, clg, sampg, wallg = drive(strip=True)
+
+    common = tok1.keys() & tokg.keys()
+    greedy_ctl = [i for i in common if i not in sampled_ids]
+    leaked = [i for i in greedy_ctl if tok1[i] != tokg[i]]
+    if leaked:
+        raise AssertionError(
+            f"{len(leaked)} greedy-tenant requests changed tokens when "
+            f"their neighbours sampled (e.g. {sorted(leaked)[:3]}) — "
+            "per-lane PRNG state must not leak across slots")
+    sampled_common = [i for i in common if i in sampled_ids]
+    diverged = [i for i in sampled_common if tok1[i] != tokg[i]]
+    frac = len(diverged) / len(sampled_common) if sampled_common else 0.0
+    if sampled_common and frac <= 0.5:
+        raise AssertionError(
+            f"only {len(diverged)}/{len(sampled_common)} sampled requests "
+            "diverged from greedy decode — sampling is not actually "
+            "engaging")
+
+    def mode(tag, report, summary, cluster, sampled_served, wall):
+        return {
+            "mode": tag, "elapsed_sim": report.elapsed,
+            "tokens": report.tokens_generated,
+            "served": summary["completed"], "rejected": report.rejected,
+            "shed": report.shed, "slo_preempts": cluster.slo_preempts,
+            "sampled_requests": sampled_served,
+            "slo_attainment": round(summary["slo_attainment"], 4),
+            "goodput_tok_per_sim_s": round(summary["goodput"], 4),
+            "throughput_tok_per_sim_s": round(report.throughput, 4),
+            "wall_s": round(wall, 3),
+        }
+
+    out = {"arch": cfg_a.name, "arch_b": cfg_b.name, "requests": n,
+           "rate": rate, "process": args.open_loop_process, "engines": 3,
+           "slots": args.slots,
+           "queue_capacity": args.queue_capacity, "page_size": ps,
+           "prefill_chunk": args.prefill_chunk,
+           "dispatch_time": args.dispatch_time, "step_time": args.step_time,
+           "tenants": {"hot": {"temperature": hot.temperature,
+                               "top_k": hot.top_k, "top_p": hot.top_p},
+                       "nucleus": {"temperature": nucleus.temperature,
+                                   "top_p": nucleus.top_p},
+                       "greedy_share": 0.5},
+           "sampled": mode("sampled", rep1, sum1, cl1, samp1, wall1),
+           "greedy": mode("greedy", repg, sumg, clg, sampg, wallg),
+           "divergence": {
+               "common_served": len(common),
+               "sampled_common": len(sampled_common),
+               "diverged_vs_greedy": len(diverged),
+               "diverged_frac": round(frac, 4),
+               "greedy_tenant_identical": True,
+           },
+           "deterministic": True}
+    if n >= 2_000 and rate <= 50.0:
+        # at bench scale the replay machinery must demonstrably engage
+        assert cl1.slo_preempts > 0, "no sampled decode was SLO-preempted"
+        assert rep1.shed > 0, "no SLO-busted heads were shed"
+    if not args.json:
+        for m in (out["sampled"], out["greedy"]):
+            print(f"{m['mode']:>8}: {m['served']} served / "
+                  f"{m['rejected']} rejected / {m['shed']} shed of {n}; "
+                  f"{m['tokens']} tokens in {m['elapsed_sim']:.0f} sim-s, "
+                  f"{m['slo_preempts']} SLO preempts, "
+                  f"{m['sampled_requests']} sampled admissions")
+        print(f"two same-seed sampled runs bit-identical; "
+              f"{len(diverged)}/{len(sampled_common)} sampled streams "
+              f"diverged from greedy ({frac:.1%}); greedy tenant untouched")
+    return out, frac
+
+
 def run_kernel_bench(cfg, args) -> tuple[dict, float]:
     """Microbenchmark the fused paged-attention kernel vs its reference.
 
@@ -711,6 +902,12 @@ def main(argv=None):
     ap.add_argument("--open-loop-skip-flat", action="store_true",
                     help="skip the flat-WRR comparison run (smoke tier: "
                          "determinism pair only)")
+    ap.add_argument("--sampling", type=int, nargs="?", const=2000,
+                    default=0, metavar="N",
+                    help="sampling workload: N open-loop arrivals with "
+                         "stochastic tenants — two same-seed runs must be "
+                         "bit-identical, sampled streams must diverge from "
+                         "greedy, greedy neighbours must not")
     ap.add_argument("--kernel-bench", action="store_true",
                     help="microbenchmark the paged-attention kernel vs ref")
     ap.add_argument("--kernel-iters", type=int, default=20)
@@ -729,6 +926,9 @@ def main(argv=None):
     if args.kernel_bench:
         out, speedup = run_kernel_bench(cfg, args)
         tag, key = "__kernel", "kernel"
+    elif args.sampling:
+        out, speedup = run_sampling(args)
+        tag, key = "__sampling", "sampling"
     elif args.open_loop:
         out, speedup = run_open_loop(args)
         tag, key = "__open_loop", "open_loop"

@@ -13,10 +13,14 @@ step-indexed data pipeline (bit-identical replay).
 The second half of the module is the serving engine's durability layer,
 :class:`RequestJournal`, whose invariants are:
 
-* **Replay determinism** — greedy decode means a replay from the journaled
-  prompt reproduces the original tokens bit-for-bit; ``record_token``
-  cross-checks every replayed token against the pre-preemption run and
-  raises on divergence rather than serving silently different output.
+* **Replay determinism** — decode is deterministic even when stochastic:
+  greedy replay is argmax, and sampled requests journal their
+  ``SamplingParams`` tuple (temperature/top-k/top-p/seed) at first open so
+  a replay re-seeds the identical per-request PRNG chain. Either way a
+  replay from the journaled prompt reproduces the original tokens
+  bit-for-bit; ``record_token`` cross-checks every replayed token against
+  the pre-preemption run and raises on divergence rather than serving
+  silently different output.
 * **FIFO order survives preemption** — ``arrival_seq`` is assigned once at
   first admission and never reassigned, so ``incomplete()`` always returns
   the original admission order.
@@ -207,6 +211,11 @@ class SlotRecord:
     rematched: int = 0             # prompt tokens adopted mid-flight (re-match)
     recycled: int = 0              # ring pages recycled out of the window
     slo_preempts: int = 0          # scheduler preempt-and-requeue demotions
+    # stochastic decode: (temperature, top_k, top_p, seed) or None for
+    # greedy. Set at first open and immutable for the record's lifetime —
+    # replay re-seeds the request's PRNG chain from this, so changing it
+    # mid-flight would silently break the divergence cross-check
+    sampling: tuple | None = None
 
 
 class RequestJournal:
@@ -227,11 +236,25 @@ class RequestJournal:
         self._records: dict[str, SlotRecord] = {}
         self._seq = 0
 
-    def open(self, request_id: str, prompt, max_new_tokens: int) -> SlotRecord:
+    def open(self, request_id: str, prompt, max_new_tokens: int,
+             sampling: tuple | None = None) -> SlotRecord:
+        """Open (or re-open, on replay) the record for one admission.
+
+        ``sampling`` is the request's ``(temperature, top_k, top_p,
+        seed)`` tuple (None for greedy), journaled at first open; a
+        re-open with *different* sampling params raises — the replayed
+        PRNG chain would not reproduce the prior run's tokens, so the
+        conflict must fail at admission, not as a later divergence.
+        """
         if request_id in self._records:
             rec = self._records[request_id]
             if rec.completed:
                 raise ValueError(f"request {request_id!r} already completed")
+            if rec.sampling != sampling:
+                raise ValueError(
+                    f"request {request_id!r} re-opened with sampling params "
+                    f"{sampling!r} != journaled {rec.sampling!r}: replay "
+                    "must re-seed the original chain")
             # replay restarts emission from scratch; keep the longest run
             # observed so far so record_token can cross-check determinism
             # even after a preemption that interrupts an earlier replay
@@ -240,7 +263,7 @@ class RequestJournal:
             rec.generated = []
             return rec
         rec = SlotRecord(request_id, tuple(int(t) for t in prompt),
-                         max_new_tokens, self._seq)
+                         max_new_tokens, self._seq, sampling=sampling)
         self._seq += 1
         self._records[request_id] = rec
         return rec

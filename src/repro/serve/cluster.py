@@ -61,7 +61,13 @@ Invariants (held by ``tests/test_cluster.py``):
 * **Preempt/replay stays per-engine deterministic.** ``preempt()``
   flushes and requeues every tenant; each engine's journal cross-checks
   its own replay tokens (the :class:`~repro.runtime.ft.ClusterJournal`
-  keeps them separate).
+  keeps them separate). This holds for stochastic traffic too: a
+  request's :class:`~repro.serve.sampling.SamplingParams` ride on the
+  :class:`~repro.serve.engine.Request` through every scheduler move
+  (shed exemption, ``preempt_busted`` demotion, full preemption), and
+  re-admission re-seeds the journaled per-request PRNG chain — so
+  sampled tokens, like greedy ones, are bit-identical whichever policy
+  served them.
 """
 
 from __future__ import annotations

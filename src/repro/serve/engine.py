@@ -56,12 +56,16 @@ replaces the engine's own ``pages.clear()`` under pool pressure with the
 cluster's fair cross-tenant eviction.
 
 Dispatch is optionally **async double-buffered** (``async_dispatch=True``):
-step N+1 launches before step N's argmax is transferred — decoding lanes
-take their input token straight from the previous step's on-device argmax
-(the ``feedback`` path), and host bookkeeping for step N (token journaling,
-completion interrupts) retires while the device chews on step N+1. Greedy
-decode makes the overlap invisible in the outputs: tokens are bit-identical
-with async on or off.
+step N+1 launches before step N's next-token vector is transferred —
+decoding lanes take their input token straight from the previous step's
+on-device output (the ``feedback`` path), and host bookkeeping for step N
+(token journaling, completion interrupts) retires while the device chews
+on step N+1. The on-device output is *sampled* per the request's
+:class:`~repro.serve.sampling.SamplingParams` (exact argmax at zero
+temperature — greedy is the default), with per-lane PRNG keys advancing
+on-device in the same launch, so the overlap is invisible in the outputs
+for stochastic and greedy decode alike: tokens are bit-identical with
+async on or off.
 
 Engine invariants (the test suite holds the engine to these):
 
@@ -71,10 +75,14 @@ Engine invariants (the test suite holds the engine to these):
 * **Refcounts never negative** — every ``bank_acquire``/page retain is
   released exactly once (on completion, eviction, or preemption);
   over-release raises instead of corrupting shared state.
-* **Replay determinism** — decode is greedy, so replay after ``preempt()``
-  reproduces every request's tokens bit-for-bit, with or without prefix
-  sharing, chunked prefill, paged decode, and async dispatch; the journal
-  cross-checks each replayed token and fails loudly on divergence.
+* **Replay determinism** — decode is deterministic even when stochastic:
+  greedy lanes replay by argmax, sampled lanes re-seed their journaled
+  per-request PRNG chain at re-admission and advance it only on emitting
+  steps (chain position == produced-token count), so replay after
+  ``preempt()`` reproduces every request's tokens bit-for-bit, with or
+  without prefix sharing, chunked prefill, paged decode, and async
+  dispatch; the journal cross-checks each replayed token and fails loudly
+  on divergence.
 """
 
 from __future__ import annotations
@@ -93,6 +101,8 @@ from repro.models.config import ModelConfig
 from repro.runtime.ft import RequestJournal
 from repro.serve.paged import PagePool, paged_chunk_fn, paged_step_fn
 from repro.serve.pages import PageTable
+from repro.serve.sampling import (GREEDY, SamplingParams, sample, seed_key,
+                                  zero_keys)
 from repro.sharding import axes as lx_
 from repro.sharding import params as P
 from repro.sharding import rules as R
@@ -200,13 +210,18 @@ def _slot_step_fn(cfg: ModelConfig):
     # ModelConfig is a frozen (hashable) dataclass; an unhashable config
     # must fail loudly here rather than risk a wrong-model cache collision
     if cfg not in _STEP_FNS:
-        def one(params, cache, tok, fb, prev):
+        def one(params, cache, tok, fb, prev, emit, key, temp, tk, tp):
             tok = jnp.where(fb, jnp.full_like(tok, prev), tok)
             logits, cache = registry.decode_step(params, cfg, cache, tok)
-            return jnp.argmax(logits, -1)[0].astype(jnp.int32), cache
+            parts = jax.random.split(key)      # [0] carry, [1] use — the
+            # same convention as sampling.split_keys, so lane and paged
+            # backends walk bit-identical per-request sampling chains
+            out = sample(logits[0], parts[1], temp, tk, tp)
+            key = jnp.where(emit, parts[0], key)
+            return out, cache, key
 
-        vstep = jax.vmap(one, in_axes=(None, 0, 0, 0, 0))
-        _STEP_FNS[cfg] = jax.jit(vstep, donate_argnums=(1,))
+        vstep = jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0))
+        _STEP_FNS[cfg] = jax.jit(vstep, donate_argnums=(1, 6))
     return _STEP_FNS[cfg]
 
 
@@ -216,18 +231,25 @@ def _chunk_step_fn(cfg: ModelConfig, chunk: int):
     Each lane scans over its token buffer; iterations past the lane's
     ``count`` are masked out (the cache carry keeps the old values bitwise,
     so a decode lane with ``count == 1`` is untouched by the padding). The
-    returned token is the argmax after the lane's last *fed* token — for a
-    lane that just consumed its final prompt token, that is its first
-    generated token.
+    returned token is sampled (exact argmax at zero temperature) after the
+    lane's last *fed* token — for a lane that just consumed its final
+    prompt token, that is its first generated token. The lane's PRNG key
+    splits once per launch (every scan iteration draws with the same
+    per-launch subkey; only the last fed iteration's token survives, so
+    the result is bit-identical to the unchunked path) and the split is
+    kept only where ``emit`` is set.
     """
     key = (cfg, chunk)
     if key not in _CHUNK_FNS:
-        def one(params, cache, toks, count, fb, prev):
+        def one(params, cache, toks, count, fb, prev, emit, rkey, temp,
+                tk, tp):
+            parts = jax.random.split(rkey)     # [0] carry, [1] use
+
             def body(cache, xs):
                 j, tok = xs
                 tok = jnp.where((j == 0) & fb, jnp.full_like(tok, prev), tok)
                 logits, new_cache = registry.decode_step(params, cfg, cache, tok)
-                out = jnp.argmax(logits, -1)[0].astype(jnp.int32)
+                out = sample(logits[0], parts[1], temp, tk, tp)
                 keep = j < count
                 cache = jax.tree.map(
                     lambda n, o: jnp.where(keep, n, o), new_cache, cache)
@@ -237,10 +259,11 @@ def _chunk_step_fn(cfg: ModelConfig, chunk: int):
                 body, cache, (jnp.arange(chunk, dtype=jnp.int32), toks))
             last = jax.lax.dynamic_index_in_dim(
                 outs, jnp.maximum(count - 1, 0), 0, keepdims=False)
-            return last, cache
+            rkey = jnp.where(emit, parts[0], rkey)
+            return last, cache, rkey
 
-        vstep = jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0))
-        _CHUNK_FNS[key] = jax.jit(vstep, donate_argnums=(1,))
+        vstep = jax.vmap(one, in_axes=(None, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0))
+        _CHUNK_FNS[key] = jax.jit(vstep, donate_argnums=(1, 7))
     return _CHUNK_FNS[key]
 
 
@@ -270,8 +293,12 @@ class Request:
 
     ``slo`` (optional) is a latency target the scheduler and the metrics
     layer read (see :class:`repro.serve.metrics.SLO`); the engine itself
-    never interprets it. ``first_token_time`` stamps the retire of the
-    request's first generated token (TTFT = that minus ``arrival_time``);
+    never interprets it. ``sampling`` (optional) selects stochastic
+    decoding (:class:`~repro.serve.sampling.SamplingParams`); ``None``
+    means greedy — and rides through preemption/requeue untouched, so a
+    replayed admission re-seeds the identical sampling chain.
+    ``first_token_time`` stamps the retire of the request's first
+    generated token (TTFT = that minus ``arrival_time``);
     ``slo_preempts`` counts scheduler-driven preempt-and-requeue demotions
     (see :meth:`ContinuousBatchingEngine.preempt_slot`).
     """
@@ -281,6 +308,7 @@ class Request:
     max_new_tokens: int
     on_complete: Callable[["Request"], None] | None = None
     slo: Any = None
+    sampling: SamplingParams | None = None
     # engine-written bookkeeping
     tokens: list = dataclasses.field(default_factory=list)
     arrival_time: float | None = None
@@ -335,7 +363,8 @@ class ContinuousBatchingEngine:
     Each of the ``slots`` decode lanes holds one request. One :meth:`step`
     advances every occupied lane: lanes still consuming their prompt are
     teacher-forced (up to ``prefill_chunk`` tokens), lanes past it decode
-    greedily. New requests are admitted into free lanes between steps;
+    under their request's sampling params (greedy by default). New
+    requests are admitted into free lanes between steps;
     in-flight lanes never stop. See the module docstring for the paged vs
     lane backends and async double-buffered dispatch.
 
@@ -504,6 +533,15 @@ class ContinuousBatchingEngine:
             self._page_template = registry.cache_init(cfg, 1, self.device_len)
             self._cache = self._init_cache()
         self._zero_prev = jnp.zeros((self.n_lanes,), jnp.int32)
+        # per-lane sampling state: the PRNG keys are device state (donated
+        # through the jitted step, advanced on-device on emitting steps);
+        # the parameters are host arrays converted per launch. Lanes are
+        # (re-)seeded at admission; greedy lanes keep temp 0 = exact argmax
+        self._keys = zero_keys(self.n_lanes)
+        self._temp = np.zeros((self.n_lanes,), np.float32)
+        self._topk = np.zeros((self.n_lanes,), np.int32)
+        self._topp = np.ones((self.n_lanes,), np.float32)
+        self.sampled_requests = 0              # admissions with sampling on
 
         n_banks = self.platform.config.n_banks
         self._slot_bank = [f"bank{i % n_banks}" for i in range(slots)]
@@ -597,9 +635,23 @@ class ContinuousBatchingEngine:
             self._cache = self._reset_fn(self._cache, i,
                                          self._page_template)
             self._dirty.discard(i)
-        rec = self.journal.open(req.id, req.prompt, req.max_new_tokens)
+        rec = self.journal.open(
+            req.id, req.prompt, req.max_new_tokens,
+            sampling=req.sampling.astuple() if req.sampling else None)
         req.tokens = []
         req.admit_time = self.clock()
+        # (re-)seed the lane's sampling chain: replay after any preemption
+        # restarts the per-request PRNG chain from the journaled seed, and
+        # emit-gated key advance makes chain position == produced count —
+        # so the replayed tokens are bit-identical however many prefill
+        # launches (prefix adoption, chunking, stalls) the replay takes
+        sp = req.sampling or GREEDY
+        self._temp[i] = sp.temperature
+        self._topk[i] = sp.top_k
+        self._topp[i] = sp.top_p
+        self._keys = self._keys.at[i].set(jnp.asarray(seed_key(sp.seed)))
+        if req.sampling is not None:
+            self.sampled_requests += 1
         slot = _Slot(request=req, seq=rec.arrival_seq)
         if match is not None:
             # shared prefix admitted pre-consumed. Paged backend: pure
@@ -690,6 +742,12 @@ class ContinuousBatchingEngine:
         toks = np.full((n, chunk), self.pad_token, np.int32)
         counts = np.zeros((n,), np.int32)
         feedback = np.zeros((n,), bool)
+        # emit[i]: lane i produces a token this launch (decode steps, and
+        # the prefill launch consuming the last prompt token) — the gate
+        # on the on-device PRNG key advance, so a lane's sampling-chain
+        # position always equals its produced-token count, whatever the
+        # chunking / prefix adoption / stall pattern of this particular run
+        emit = np.zeros((n,), bool)
         pending_emit = ({i: s for i, s in self._pending[0].emitted}
                         if self._pending is not None else {})
 
@@ -710,8 +768,10 @@ class ContinuousBatchingEngine:
                     continue               # counts[i] stays 0: wait, adopt
                 toks[i, :m] = prompt[slot.fed:slot.fed + m]
                 counts[i] = m
+                emit[i] = slot.fed + m >= len(prompt)
             else:
                 counts[i] = 1
+                emit[i] = True
                 if self.async_dispatch and pending_emit.get(i) is slot:
                     feedback[i] = True     # token rides on-device from step N
                 else:
@@ -719,7 +779,7 @@ class ContinuousBatchingEngine:
             if self.paged and counts[i]:
                 self._ensure_pages(slot, slot.fed + int(counts[i]))
 
-        nxt = self._launch(toks, counts, feedback)
+        nxt = self._launch(toks, counts, feedback, emit)
         meta = _StepMeta([], [])
         for i, slot in enumerate(self.slots):
             if slot is None:
@@ -751,24 +811,30 @@ class ContinuousBatchingEngine:
                 self._evict(i)
         return meta, nxt
 
-    def _launch(self, toks, counts, feedback):
-        """One batched device launch; returns the on-device next-token vec."""
+    def _launch(self, toks, counts, feedback, emit):
+        """One batched device launch; returns the on-device next-token vec
+        (sampled per lane — exact argmax for greedy lanes)."""
         chunk = self.prefill_chunk
         prev = (self._prev_nxt if self._prev_nxt is not None
                 else self._zero_prev)
         fb = jnp.asarray(feedback)
+        em = jnp.asarray(emit)
+        temp = jnp.asarray(self._temp)
+        tk = jnp.asarray(self._topk)
+        tp = jnp.asarray(self._topp)
         if self.paged:
             arena = self._arena
             tables, lengths = self._build_tables()
             if chunk == 1 or int(counts.max()) <= 1:
-                nxt, arena.k, arena.v = self._pstep(
+                nxt, arena.k, arena.v, self._keys = self._pstep(
                     self.params, arena.k, arena.v, tables, lengths,
                     jnp.asarray(toks[:, 0]), fb, prev,
-                    jnp.asarray(counts > 0))
+                    jnp.asarray(counts > 0), em, self._keys, temp, tk, tp)
             else:
-                nxt, arena.k, arena.v = self._pchunk(
+                nxt, arena.k, arena.v, self._keys = self._pchunk(
                     self.params, arena.k, arena.v, tables, lengths,
-                    jnp.asarray(toks), jnp.asarray(counts), fb, prev)
+                    jnp.asarray(toks), jnp.asarray(counts), fb, prev,
+                    em, self._keys, temp, tk, tp)
             return nxt
         self._apply_pending_snapshots()
         # empty lanes still ride the batched step (pad token): their lanes
@@ -779,13 +845,13 @@ class ContinuousBatchingEngine:
         if chunk == 1 or int(counts.max()) <= 1:
             # steady-state decode: every lane feeds one token, so skip the
             # chunk scan (it would run chunk-1 masked iterations per lane)
-            nxt, self._cache = self._step_fn(self.params, self._cache,
-                                             jnp.asarray(toks4[:, 0]), fb,
-                                             prev)
+            nxt, self._cache, self._keys = self._step_fn(
+                self.params, self._cache, jnp.asarray(toks4[:, 0]), fb,
+                prev, em, self._keys, temp, tk, tp)
         else:
-            nxt, self._cache = self._chunk_fn(self.params, self._cache,
-                                              jnp.asarray(toks4),
-                                              jnp.asarray(counts), fb, prev)
+            nxt, self._cache, self._keys = self._chunk_fn(
+                self.params, self._cache, jnp.asarray(toks4),
+                jnp.asarray(counts), fb, prev, em, self._keys, temp, tk, tp)
         return nxt
 
     def _retire(self, pending: tuple[_StepMeta, Any]) -> None:
@@ -1036,8 +1102,10 @@ class ContinuousBatchingEngine:
     def preempt(self) -> list[Request]:
         """Evict every lane; re-queue in-flight requests in FIFO order.
 
-        Greedy decode is deterministic, so replay from the journal's prompts
-        reproduces the preempted requests' outputs bit-for-bit. An in-flight
+        Decode is deterministic (greedy by argmax; sampled lanes re-seed
+        their journaled PRNG chain at re-admission), so replay from the
+        journal's prompts reproduces the preempted requests' outputs
+        bit-for-bit. An in-flight
         async step is retired first — its tokens belong to the
         pre-preemption run and seed the journal's divergence cross-check.
         """
@@ -1162,6 +1230,7 @@ class ContinuousBatchingEngine:
             "rematches": self.rematches,
             "rematched_tokens": self.rematched_tokens,
             "completed": len(self.completed),
+            "sampled_requests": self.sampled_requests,
             "rejected": self.rejected,
             "shed": self.shed,
             "queued": len(self.queue),

@@ -44,6 +44,7 @@ from typing import Iterator, Sequence
 
 from repro.serve.engine import Request
 from repro.serve.metrics import SLO
+from repro.serve.sampling import SamplingParams
 from repro.serve.sim import Arrival
 
 __all__ = ["TenantSpec", "bursty_times", "diurnal_times", "open_loop_trace",
@@ -63,7 +64,12 @@ class TenantSpec:
     (clamped to leave at least one fresh prompt token), so requests of
     one tenant — and of any tenant sharing the same ``prefix_seed`` —
     hit the prefix cache. ``slo`` (optional) rides on every generated
-    request as ``Request.slo``.
+    request as ``Request.slo``. ``sampling`` (optional) turns the
+    tenant's traffic stochastic: each generated request carries a copy of
+    the :class:`~repro.serve.sampling.SamplingParams` with a fresh
+    per-request ``seed`` drawn from the trace's mix RNG — deterministic
+    per trace seed, distinct per request, and drawn *only* for sampling
+    tenants so purely greedy traces stay bit-identical to PR 6.
     """
 
     engine: str
@@ -74,6 +80,7 @@ class TenantSpec:
     prefix_seed: int = 0
     slo: SLO | None = None
     vocab: int = 240
+    sampling: SamplingParams | None = None
 
     def __post_init__(self):
         if self.share <= 0:
@@ -199,7 +206,13 @@ def open_loop_trace(tenants: Sequence[TenantSpec], *, n_requests: int,
         prefix = prefixes[k][:min(spec.prefix_len, plen - 1)]
         tail = [rng.randint(1, spec.vocab)
                 for _ in range(plen - len(prefix))]
+        sampling = None
+        if spec.sampling is not None:
+            # the seed draw happens only for sampling tenants, so a trace
+            # with no sampling tenant consumes exactly the PR 6 stream
+            sampling = dataclasses.replace(spec.sampling,
+                                           seed=rng.getrandbits(31))
         req = Request(id=f"{spec.engine}-{i}",
                       prompt=list(prefix) + tail,
-                      max_new_tokens=ntok, slo=spec.slo)
+                      max_new_tokens=ntok, slo=spec.slo, sampling=sampling)
         yield Arrival(t_arr, req, spec.engine)

@@ -37,10 +37,13 @@ Invariants:
   arbitrate it.
 
 The jitted step functions take *device feedback*: a decoding lane's input
-token can come straight from the previous step's on-device argmax
-(``feedback``/``prev``), so the host never has to block on a transfer
-before dispatching the next step — the data path of the engine's async
-double-buffered dispatch.
+token can come straight from the previous step's on-device next token —
+sampled per the lane's :class:`~repro.serve.sampling.SamplingParams`,
+exact argmax at zero temperature — via ``feedback``/``prev``, so the host
+never has to block on a transfer before dispatching the next step: the
+data path of the engine's async double-buffered dispatch survives
+stochastic sampling because the per-lane PRNG keys advance on-device in
+the same launch (see :mod:`repro.serve.sampling`).
 """
 
 from __future__ import annotations
@@ -55,6 +58,7 @@ from jax import lax
 
 from repro.models import registry
 from repro.models.config import ModelConfig
+from repro.serve.sampling import sample, split_keys
 
 __all__ = ["PagePool", "PoolArena", "pool_signature", "paged_step_fn",
            "paged_chunk_fn"]
@@ -199,26 +203,35 @@ def paged_step_fn(cfg: ModelConfig, window: int | None = None):
     """Jitted single-token paged decode over every lane.
 
     Signature: ``(params, pool_k, pool_v, tables, lengths, toks, feedback,
-    prev, mask) -> (next_tokens, pool_k', pool_v')`` where ``toks`` (B,) are
-    host-chosen tokens, ``feedback`` (B,) selects the previous step's
-    on-device argmax ``prev`` instead (async double-buffering), and ``mask``
-    (B,) gates the KV append (False = idle/stalled lane riding the batch).
+    prev, mask, emit, keys, temp, top_k, top_p) -> (next_tokens, pool_k',
+    pool_v', keys')`` where ``toks`` (B,) are host-chosen tokens,
+    ``feedback`` (B,) selects the previous step's on-device next token
+    ``prev`` instead (async double-buffering), and ``mask`` (B,) gates the
+    KV append (False = idle/stalled lane riding the batch). ``keys`` is the
+    per-lane raw PRNG key state; each lane's next token is drawn by
+    :func:`~repro.serve.sampling.sample` under its (``temp``, ``top_k``,
+    ``top_p``) parameters — exact argmax at zero temperature — and its key
+    splits only where ``emit`` (B,) is set, so the sampling chain position
+    always equals the lane's produced-token count (replay determinism).
     ``window`` (sliding-window configs) switches the block tables to ring
     semantics — pass the engine's *clamped* window (``min(cfg.sliding_
     window, device cache length)``) so the decode stays bit-identical to
-    the lane ring cache. Pools are donated.
+    the lane ring cache. Pools and keys are donated.
     """
     key = ("step", cfg, window)
     if key not in _PAGED_FNS:
         def step(params, pool_k, pool_v, tables, lengths, toks, feedback,
-                 prev, mask):
+                 prev, mask, emit, keys, temp, top_k, top_p):
             tok = jnp.where(feedback, prev, toks)
             logits, pool_k, pool_v = registry.decode_step_paged(
                 params, cfg, pool_k, pool_v, tables, lengths, tok,
                 append_mask=mask, window=window)
-            return (jnp.argmax(logits, -1).astype(jnp.int32), pool_k, pool_v)
+            carry, use = split_keys(keys)
+            nxt = jax.vmap(sample)(logits, use, temp, top_k, top_p)
+            keys = jnp.where(emit[:, None], carry, keys)
+            return nxt, pool_k, pool_v, keys
 
-        _PAGED_FNS[key] = jax.jit(step, donate_argnums=(1, 2))
+        _PAGED_FNS[key] = jax.jit(step, donate_argnums=(1, 2, 10))
     return _PAGED_FNS[key]
 
 
@@ -227,14 +240,22 @@ def paged_chunk_fn(cfg: ModelConfig, chunk: int, window: int | None = None):
 
     Scans the single-token paged step; iterations past a lane's ``count``
     are masked appends (the pool is untouched bitwise, so a decode lane
-    with ``count == 1`` sees exactly one append). The returned token is the
-    argmax after each lane's last fed token. ``window`` as in
-    :func:`paged_step_fn`. Pools are donated.
+    with ``count == 1`` sees exactly one append). The returned token is
+    sampled (exact argmax at zero temperature) after each lane's last fed
+    token. The per-lane key splits **once per launch** regardless of
+    ``count`` — every scan iteration draws with the same per-launch
+    subkey and only the last fed iteration's token is kept, so a chunked
+    prefill's first generated token is bit-identical to the unchunked
+    path's — and the split is kept only where ``emit`` is set (lanes
+    whose prefill completes this launch, and decode lanes). ``window``
+    as in :func:`paged_step_fn`. Pools and keys are donated.
     """
     key = ("chunk", cfg, chunk, window)
     if key not in _PAGED_FNS:
         def step(params, pool_k, pool_v, tables, lengths, toks, counts,
-                 feedback, prev):
+                 feedback, prev, emit, keys, temp, top_k, top_p):
+            carry_keys, use = split_keys(keys)
+
             def body(carry, xs):
                 pool_k, pool_v = carry
                 j, tok_j = xs
@@ -243,14 +264,15 @@ def paged_chunk_fn(cfg: ModelConfig, chunk: int, window: int | None = None):
                     params, cfg, pool_k, pool_v, tables, lengths + j, tok,
                     append_mask=j < counts, window=window)
                 return ((pool_k, pool_v),
-                        jnp.argmax(logits, -1).astype(jnp.int32))
+                        jax.vmap(sample)(logits, use, temp, top_k, top_p))
 
             (pool_k, pool_v), outs = lax.scan(
                 body, (pool_k, pool_v),
                 (jnp.arange(chunk, dtype=jnp.int32), toks.T))
             last = jnp.take_along_axis(
                 outs.T, jnp.maximum(counts - 1, 0)[:, None], 1)[:, 0]
-            return last, pool_k, pool_v
+            keys = jnp.where(emit[:, None], carry_keys, keys)
+            return last, pool_k, pool_v, keys
 
-        _PAGED_FNS[key] = jax.jit(step, donate_argnums=(1, 2))
+        _PAGED_FNS[key] = jax.jit(step, donate_argnums=(1, 2, 10))
     return _PAGED_FNS[key]

@@ -1,0 +1,140 @@
+"""Deterministic per-request stochastic sampling for the serving engine.
+
+Greedy decode made every determinism invariant in the stack free:
+replaying an argmax chain from the prompt reproduces it bit-for-bit.
+Sampling breaks that unless the PRNG state is part of the replayable
+state — so this module treats the sampler exactly the way the engine
+treats the KV cache:
+
+* :class:`SamplingParams` rides on the :class:`~repro.serve.engine.
+  Request` (temperature / top-k / top-p / seed) and is journaled per
+  admission in the :class:`~repro.runtime.ft.SlotRecord`, so a replayed
+  admission re-seeds the exact chain the original run used.
+* The per-lane PRNG key lives in the engine's **device state** next to
+  the cache (a ``(n_lanes, 2)`` raw ``uint32`` array, donated through the
+  jitted step like the KV pool), and advances **on-device** each step —
+  the sampled token replaces the on-device argmax as the async-dispatch
+  feedback path, so the one-step-ahead pipeline survives sampling.
+* The advance is **gated by the engine's emit mask**: a lane's key splits
+  only on steps that emit a token (decode steps, and the prefill launch
+  that consumes the last prompt token). The chain position therefore
+  equals the number of tokens produced — invariant to chunking, prefix
+  adoption, dedup stalls, mid-flight re-matches, backend choice, and
+  async dispatch, which is what makes preempt/replay (where the replayed
+  run may find different pages resident and take a different number of
+  prefill launches) bit-identical.
+
+Greedy decode is the zero-temperature degenerate case: ``temperature ==
+0`` returns the exact argmax (the pre-sampling engine behaviour), so a
+mixed batch of greedy and sampled lanes shares one step function and the
+greedy lanes' outputs are bit-identical to an engine with no sampling at
+all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["GREEDY", "SamplingParams", "sample", "seed_key", "split_keys",
+           "zero_keys"]
+
+_MASKED = -jnp.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling controls (hashable, journal-friendly).
+
+    ``temperature == 0`` is exact greedy decode — ``top_k``/``top_p``/
+    ``seed`` are then inert. ``top_k == 0`` disables the top-k filter;
+    ``top_p == 1.0`` disables the nucleus filter; both filters compose
+    (top-k first, then top-p over the renormalised survivors). ``seed``
+    names the request's private PRNG chain: equal seeds + equal logits ⇒
+    equal tokens, on any backend, replayed any number of times.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError("temperature cannot be negative")
+        if self.top_k < 0:
+            raise ValueError("top_k cannot be negative")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
+        if self.seed < 0:
+            raise ValueError("seed cannot be negative")
+
+    @property
+    def greedy(self) -> bool:
+        """True when this is the zero-temperature (argmax) degenerate."""
+        return self.temperature == 0.0
+
+    def astuple(self) -> tuple:
+        """The journal form: ``(temperature, top_k, top_p, seed)``."""
+        return (float(self.temperature), int(self.top_k),
+                float(self.top_p), int(self.seed))
+
+
+GREEDY = SamplingParams()
+
+
+def seed_key(seed: int) -> np.ndarray:
+    """Host-side raw threefry key for ``seed`` — the same ``(2,)`` uint32
+    layout ``jax.random.PRNGKey`` produces, computed without a device op
+    so admission stays a host-only event."""
+    return np.array([(seed >> 32) & 0xFFFFFFFF, seed & 0xFFFFFFFF],
+                    np.uint32)
+
+
+def zero_keys(n_lanes: int):
+    """Initial per-lane key state: every lane at ``seed_key(0)`` (lanes
+    are re-seeded at admission; idle lanes never consume their key)."""
+    return jnp.zeros((n_lanes, 2), jnp.uint32)
+
+
+def split_keys(keys):
+    """Split a ``(B, 2)`` raw key batch into ``(carry, use)`` halves.
+
+    Row convention (shared by every step function so lane and paged
+    backends walk bit-identical chains): ``split(key)[0]`` is the key
+    carried to the next emitting step, ``split(key)[1]`` is consumed by
+    this step's :func:`sample`.
+    """
+    ks = jax.vmap(lambda k: jax.random.split(k))(keys)
+    return ks[:, 0], ks[:, 1]
+
+
+def sample(logits, key, temperature, top_k, top_p):
+    """Sample one token id from one ``(vocab,)`` logits vector.
+
+    Temperature-scaled categorical sampling with optional top-k and
+    nucleus (top-p) filtering; ``temperature == 0`` short-circuits to the
+    exact argmax (bitwise the engine's pre-sampling greedy path). The
+    nucleus keeps the smallest probability-sorted set whose *exclusive*
+    cumulative mass is below ``top_p`` — the top token always survives,
+    so the distribution is never empty. All arguments may be traced
+    scalars, so one compiled step serves every lane's parameters.
+    """
+    greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+    scaled = (logits / jnp.maximum(temperature, 1e-6)).astype(jnp.float32)
+    # top-k: logits below the kth-largest are masked (k == 0 keeps all)
+    desc = jnp.sort(scaled)[::-1]
+    kth = jnp.where(top_k > 0, desc[jnp.maximum(top_k - 1, 0)], _MASKED)
+    scaled = jnp.where(scaled < kth, _MASKED, scaled)
+    # top-p over the survivors: keep the smallest prefix of the
+    # probability-sorted distribution with exclusive cumsum < top_p
+    probs = jax.nn.softmax(scaled)
+    ps = jnp.sort(probs)[::-1]
+    exclusive = jnp.cumsum(ps) - ps
+    pmin = jnp.min(jnp.where(exclusive < top_p, ps, jnp.inf))
+    scaled = jnp.where((top_p < 1.0) & (probs < pmin), _MASKED, scaled)
+    sampled = jax.random.categorical(key, scaled).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)

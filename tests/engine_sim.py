@@ -25,6 +25,7 @@ __all__ = [
     "SimReport", "Simulator", "add_smoke_engine", "burst_trace",
     "make_cluster", "shared_prefix_requests", "staggered_trace", "tag_engine",
     "Request", "make_engine", "make_requests", "run_trace", "smoke_params",
+    "shared_prefix_reqs", "standalone_tokens", "tokens_of",
 ]
 
 _PARAM_CACHE: dict[str, tuple] = {}
@@ -103,6 +104,38 @@ def make_requests(n: int, *, prompt_len: int = 3, new_tokens: int = 4,
                 max_new_tokens=new_tokens)
         for i in range(n)
     ]
+
+
+def tokens_of(eng_or_report) -> dict:
+    """``{request_id: token tuple}`` over the ``completed`` list of an
+    engine, a cluster engine, or a ``SimReport`` — the comparison every
+    bit-identity assertion in the suite is written against."""
+    return {r.id: tuple(r.tokens) for r in eng_or_report.completed}
+
+
+def shared_prefix_reqs(prefix: str, n: int = 4, *, prefix_len: int = 16,
+                       tail_len: int = 3, new_tokens: int = 4):
+    """``n`` requests sharing one prompt prefix (the prefix-cache workload),
+    with ids ``{prefix}0..``."""
+    return shared_prefix_requests(n, prefix_len=prefix_len, tail_len=tail_len,
+                                  new_tokens=new_tokens, id_prefix=prefix)
+
+
+def standalone_tokens(arch: str, reqs, *, seed: int = 0, trace=burst_trace,
+                      slots: int = 2, max_len: int = 40, page_size: int = 8,
+                      **engine_kwargs) -> dict:
+    """Reference tokens: the same model serving the same trace alone, on
+    its own private pool and table (the bit-identity baseline the cluster
+    tests compare tenants against)."""
+    cfg, params = smoke_params(arch, seed)
+    clock = FakeClock()
+    engine_kwargs.setdefault("lane_batch", CANONICAL["lane_batch"])
+    engine_kwargs.setdefault("device_len", CANONICAL["device_len"])
+    eng = ContinuousBatchingEngine(
+        cfg, params, slots=slots, max_len=max_len, clock=clock,
+        page_size=page_size, **engine_kwargs)
+    Simulator(eng, trace(reqs), clock).run()
+    return tokens_of(eng)
 
 
 def run_trace(arch: str, trace, *, slots: int = 3, max_len: int = 32,

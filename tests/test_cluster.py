@@ -28,29 +28,11 @@ from engine_sim import (ClusterSimulator, FakeClock, PowerBudget, Request,
 from repro.serve.paged import PagePool
 
 
-def _tokens(eng):
-    return {r.id: tuple(r.tokens) for r in eng.completed}
-
-
-def _reqs(prefix, n=4, *, prefix_len=16, tail_len=3, new_tokens=4):
-    return shared_prefix_requests(n, prefix_len=prefix_len, tail_len=tail_len,
-                                  new_tokens=new_tokens, id_prefix=prefix)
-
-
-def _standalone(arch, reqs, *, seed=0, trace=burst_trace):
-    """Reference run: the same model serving the same trace alone, on its
-    own private pool and table."""
-    from engine_sim import CANONICAL
-    from repro.serve.engine import ContinuousBatchingEngine
-
-    cfg, params = smoke_params(arch, seed)
-    clock = FakeClock()
-    eng = ContinuousBatchingEngine(
-        cfg, params, slots=2, max_len=40, clock=clock, page_size=8,
-        lane_batch=CANONICAL["lane_batch"],
-        device_len=CANONICAL["device_len"])
-    Simulator(eng, trace(reqs), clock).run()
-    return _tokens(eng)
+# shared helpers live in engine_sim (PR 7 hygiene: one definition for the
+# five suites that compare completed-token maps)
+from engine_sim import shared_prefix_reqs as _reqs
+from engine_sim import standalone_tokens as _standalone
+from engine_sim import tokens_of as _tokens
 
 
 # -- the tentpole: two models, one pool, one table -----------------------------

@@ -21,8 +21,7 @@ from repro.models import registry
 from repro.serve.engine import ADMIT_LINE, COMPLETE_LINE
 
 
-def _tokens(report):
-    return {r.id: tuple(r.tokens) for r in report.completed}
+from engine_sim import tokens_of as _tokens  # shared across the suites
 
 
 # -- the headline acceptance property -----------------------------------------

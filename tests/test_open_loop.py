@@ -37,8 +37,7 @@ from repro.serve.loadgen import (TenantSpec, bursty_times, diurnal_times,
 from repro.serve.metrics import SLO, ServeMetrics, met_slo, percentile
 
 
-def _tokens(eng):
-    return {r.id: tuple(r.tokens) for r in eng.completed}
+from engine_sim import tokens_of as _tokens  # shared across the suites
 
 
 # ---------------------------------------------------------------------------
@@ -426,3 +425,29 @@ def test_cluster_charges_async_engines_their_overlapped_cost():
         assert rep.elapsed == solo_rep.elapsed   # same cost model as solo
         assert rep.tokens_generated == solo_rep.tokens_generated
         assert solo_toks == sync_toks
+
+
+# ---------------------------------------------------------------------------
+# determinism regression gate
+
+
+def test_sim_smoke_determinism_gate():
+    """The 1k-request sim-smoke trace, in-process: ``serve_bench``'s
+    open-loop mode drives the seeded bursty trace through two
+    independently constructed clusters and raises inside ``run_open_loop``
+    if any report field, metric summary, or token stream differs — this
+    test is the fast-tier regression gate for that bit-reproducibility
+    claim (``make sim-smoke`` runs the same configuration as a build
+    step)."""
+    import pathlib
+    import sys
+
+    bench_dir = str(pathlib.Path(__file__).resolve().parents[1]
+                    / "benchmarks")
+    if bench_dir not in sys.path:
+        sys.path.insert(0, bench_dir)
+    import serve_bench
+
+    gain = serve_bench.main(["--slots", "4", "--prefill-chunk", "4",
+                             "--open-loop", "1000", "--open-loop-skip-flat"])
+    assert gain == 1.0                # skip-flat: determinism pair only

@@ -22,9 +22,7 @@ from repro.core.power import PowerState
 from repro.serve.pages import PageTable
 
 
-def _tokens(eng_or_report):
-    done = getattr(eng_or_report, "completed")
-    return {r.id: tuple(r.tokens) for r in done}
+from engine_sim import tokens_of as _tokens  # shared across the suites
 
 
 # -- PageTable unit behaviour (snapshots are opaque; no jax) -------------------

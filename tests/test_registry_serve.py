@@ -1,0 +1,90 @@
+"""Registry-wide serving coverage: every config admits and completes.
+
+Every architecture in :mod:`repro.configs` — dense transformers, SWA,
+modality stubs (MusicGen / InternVL2), MoE (Grok / Llama-4), Mamba-2 and
+Griffin — is driven through the continuous-batching engine at smoke
+shapes on the backend :func:`repro.models.registry.supports_paged`
+selects for it:
+
+* admission + completion on the default backend, greedy and sampled,
+  with the journal closing every record;
+* paged vs lane bit-identity for every paged-capable config (the backends
+  must be interchangeable, not merely both plausible);
+* same-seed determinism on the lane fallbacks (SSM / hybrid / MoE state
+  has no paged path — the lane backend alone carries the replay
+  contract there).
+
+Mirrors the ``test_models.py`` tiering: one arch per family stays in the
+fast tier, the long tail runs in the full tier (``slow``).
+"""
+
+import pytest
+
+from engine_sim import (Simulator, burst_trace, make_engine, make_requests,
+                        tokens_of)
+from repro import configs
+from repro.models import registry
+from repro.serve.sampling import SamplingParams
+
+# one arch per family (+MoE) in the fast tier — same split as
+# test_models._FAST_FORWARD, which keeps each family's compile warm
+_FAST = {"granite_3_2b", "mamba2_370m", "recurrentgemma_2b", "grok_1_314b"}
+
+
+def _tiered(names):
+    return [a if a in _FAST else pytest.param(a, marks=pytest.mark.slow)
+            for a in names]
+
+
+def _reqs():
+    """Two tiny requests: one greedy, one sampled — both contracts per
+    arch in one engine run."""
+    reqs = make_requests(2, prompt_len=4, new_tokens=3)
+    reqs[1].sampling = SamplingParams(temperature=0.8, top_p=0.9, seed=7)
+    return reqs
+
+
+def _serve(arch, **engine_kwargs):
+    eng, clock = make_engine(arch, slots=2, max_len=24, **engine_kwargs)
+    Simulator(eng, burst_trace(_reqs()), clock).run()
+    return eng
+
+
+@pytest.mark.parametrize("arch", _tiered(configs.names()))
+def test_every_config_admits_and_completes(arch):
+    """The engine serves the config on its registry-selected backend:
+    every request admits, decodes its full budget, and closes its journal
+    record."""
+    cfg = configs.smoke(arch)
+    eng = _serve(arch)
+    want = "paged" if registry.supports_paged(cfg) else "lanes"
+    assert eng.stats()["backend"] == want
+    toks = tokens_of(eng)
+    assert set(toks) == {"r0", "r1"}
+    assert all(len(t) == 3 for t in toks.values())
+    assert all(1 <= int(tok) <= cfg.vocab for t in toks.values() for tok in t)
+    for rid in toks:
+        assert eng.journal.get(rid).completed
+    assert eng.stats()["sampled_requests"] == 1
+
+
+@pytest.mark.parametrize(
+    "arch", _tiered(a for a in configs.names()
+                    if registry.supports_paged(configs.smoke(a))))
+def test_paged_and_lane_backends_agree(arch):
+    """Paged-capable configs emit the same greedy *and* sampled streams on
+    both backends — backend choice is a memory decision, never an output
+    decision."""
+    assert tokens_of(_serve(arch)) == tokens_of(_serve(arch, paged=False))
+
+
+@pytest.mark.parametrize(
+    "arch", _tiered(a for a in configs.names()
+                    if not registry.supports_paged(configs.smoke(a))))
+def test_lane_fallbacks_are_seed_deterministic(arch):
+    """Mamba-2 / Griffin / MoE have no paged path; the lane backend alone
+    must carry the replay contract: two fresh engines, same per-request
+    seeds, bit-identical sampled streams."""
+    a, b = tokens_of(_serve(arch)), tokens_of(_serve(arch))
+    assert a == b
+    assert len(a["r1"]) == 3

@@ -1,0 +1,361 @@
+"""Deterministic stochastic sampling on the serving stack.
+
+The tentpole contract of :mod:`repro.serve.sampling`: per-request seeded
+sampling (temperature / top-k / top-p, greedy as the zero-temperature
+degenerate case) rides on ``Request.sampling``, is journaled at admission,
+and advances a per-slot PRNG chain **by produced token**, so the sampled
+stream is a pure function of ``(params, prompt, SamplingParams)`` —
+invariant to backend (paged vs lanes), dispatch mode (sync vs async
+double-buffered), prefill chunking, batch composition, preemption +
+replay, and cluster scheduling. Every test here is a bit-identity
+assertion between two of those execution paths, plus unit properties of
+the sampling math itself.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from engine_sim import (CANONICAL, FakeClock, Request, Simulator,
+                        add_smoke_engine, burst_trace, make_cluster,
+                        make_engine, make_requests, smoke_params,
+                        staggered_trace, tag_engine, tokens_of)
+from repro.runtime.ft import RequestJournal
+from repro.serve.cluster import SchedPolicy
+from repro.serve.engine import ContinuousBatchingEngine
+from repro.serve.loadgen import TenantSpec, open_loop_trace
+from repro.serve.metrics import SLO
+from repro.serve.sampling import (GREEDY, SamplingParams, sample, seed_key,
+                                  split_keys, zero_keys)
+from repro.serve.sim import ClusterSimulator
+
+
+# ---------------------------------------------------------------------------
+# sampling math
+
+
+def _logits(n: int = 32, seed: int = 0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=(n,)),
+                       jnp.float32)
+
+
+def test_zero_temperature_is_exact_argmax():
+    """Greedy is the degenerate case, not an approximation: temperature 0
+    returns ``argmax`` bit-for-bit whatever the key or truncation knobs."""
+    logits = _logits()
+    want = int(jnp.argmax(logits))
+    for seed in (0, 1, 12345):
+        got = sample(logits, jax.random.PRNGKey(seed), 0.0, 5, 0.5)
+        assert int(got) == want
+
+
+def test_top_k_one_is_argmax_at_any_temperature():
+    logits = _logits(seed=3)
+    want = int(jnp.argmax(logits))
+    for seed in range(8):
+        assert int(sample(logits, jax.random.PRNGKey(seed),
+                          5.0, 1, 1.0)) == want
+
+
+def test_tiny_top_p_keeps_only_the_top_token():
+    """The nucleus always contains the most probable token, so a top_p
+    below its probability mass degenerates to argmax."""
+    logits = _logits(seed=4)
+    want = int(jnp.argmax(logits))
+    for seed in range(8):
+        assert int(sample(logits, jax.random.PRNGKey(seed),
+                          2.0, 0, 1e-6)) == want
+
+
+def test_top_k_restricts_support():
+    """With top_k = 4, every draw lands in the 4 highest-logit tokens even
+    at a temperature flat enough to otherwise visit the whole vocab."""
+    logits = _logits(seed=5)
+    allowed = set(np.argsort(np.asarray(logits))[-4:].tolist())
+    for seed in range(24):
+        tok = int(sample(logits, jax.random.PRNGKey(seed), 8.0, 4, 1.0))
+        assert tok in allowed
+
+
+def test_top_p_restricts_support_to_the_nucleus():
+    """One dominant token (softmax mass > 0.9): top_p = 0.5 must never
+    sample outside it, however hot the pre-truncation distribution."""
+    logits = jnp.zeros((16,), jnp.float32).at[7].set(8.0)
+    for seed in range(16):
+        assert int(sample(logits, jax.random.PRNGKey(seed),
+                          1.0, 0, 0.5)) == 7
+
+
+def test_same_key_reproduces_different_keys_vary():
+    logits = _logits(seed=6)
+    key = jax.random.PRNGKey(11)
+    a = int(sample(logits, key, 2.0, 0, 1.0))
+    assert int(sample(logits, key, 2.0, 0, 1.0)) == a
+    draws = {int(sample(logits, jax.random.PRNGKey(s), 2.0, 0, 1.0))
+             for s in range(24)}
+    assert len(draws) > 1
+
+
+def test_split_keys_matches_scalar_split_convention():
+    """The batched helper and the scalar lane path must walk the *same*
+    chain: row 0 of ``jax.random.split`` carries, row 1 is consumed."""
+    keys = jnp.stack([jnp.asarray(seed_key(s)) for s in (1, 2, 3)])
+    carry, use = split_keys(keys)
+    for i in range(3):
+        parts = jax.random.split(keys[i])
+        assert jnp.array_equal(carry[i], parts[0])
+        assert jnp.array_equal(use[i], parts[1])
+    assert zero_keys(3).shape == keys.shape
+
+
+def test_sampling_params_validation():
+    assert GREEDY.greedy and GREEDY.astuple() == (0.0, 0, 1.0, 0)
+    assert not SamplingParams(temperature=0.5).greedy
+    for bad in (dict(temperature=-0.1), dict(top_k=-1), dict(top_p=0.0),
+                dict(top_p=1.5), dict(seed=-1)):
+        with pytest.raises(ValueError):
+            SamplingParams(**bad)
+
+
+# ---------------------------------------------------------------------------
+# engine bit-identity matrix
+
+
+def sampled_reqs(n: int = 4, *, prompt_len: int = 6, new_tokens: int = 6,
+                 prefix: str = "s", temperature: float = 0.8,
+                 top_k: int = 0, top_p: float = 0.9, seed0: int = 100):
+    """``n`` requests with per-request seeds ``seed0..`` — the journaled
+    identity each replay test reproduces."""
+    return [
+        Request(id=f"{prefix}{i}",
+                prompt=[(7 * i + j) % 251 + 1 for j in range(prompt_len)],
+                max_new_tokens=new_tokens,
+                sampling=SamplingParams(temperature=temperature, top_k=top_k,
+                                        top_p=top_p, seed=seed0 + i))
+        for i in range(n)
+    ]
+
+
+def _run(reqs, *, gap: float = 1.0, **engine_kwargs):
+    eng, clock = make_engine(slots=3, max_len=32, **engine_kwargs)
+    Simulator(eng, staggered_trace(reqs, gap=gap), clock).run()
+    return eng
+
+
+def test_sampled_parity_backends_async_and_chunking():
+    """One sampled trace through five engine variants — paged/lanes,
+    sync/async, chunked/unchunked prefill — produces one token stream,
+    and that stream differs from greedy decoding of the same prompts."""
+    variants = [dict(async_dispatch=True), {}, dict(paged=False),
+                dict(prefill_chunk=4, async_dispatch=True),
+                dict(paged=False, prefill_chunk=4)]
+    runs = [_run(sampled_reqs(), **kw) for kw in variants]
+    want = tokens_of(runs[0])
+    for eng in runs[1:]:
+        assert tokens_of(eng) == want
+    assert runs[0].stats()["backend"] == "paged"
+    assert runs[2].stats()["backend"] == "lanes"
+    assert runs[0].stats()["sampled_requests"] == 4
+    greedy = tokens_of(_run(make_requests(4, prompt_len=6, new_tokens=6,
+                                          prefix="s")))
+    assert want != greedy                     # temperature 0.8 really sampled
+
+
+def test_per_request_seed_controls_the_stream():
+    """Same seeds ⇒ bit-identical across fresh engines; different seeds ⇒
+    different tokens. The seed is the whole identity of the stream."""
+    a = tokens_of(_run(sampled_reqs()))
+    assert tokens_of(_run(sampled_reqs())) == a
+    assert tokens_of(_run(sampled_reqs(seed0=900))) != a
+
+
+def test_mixed_batch_leaves_greedy_lanes_untouched():
+    """Greedy and sampled requests interleaved in one batch: the greedy
+    streams are bit-identical to an all-greedy engine — a neighbour's PRNG
+    never leaks across lanes."""
+    def greedy_reqs():
+        return make_requests(3, prompt_len=5, new_tokens=6, prefix="g")
+
+    mixed = [r for pair in zip(greedy_reqs(), sampled_reqs(3)) for r in pair]
+    eng = _run(mixed, async_dispatch=True)
+    solo = _run(greedy_reqs())
+    got = tokens_of(eng)
+    assert {k: v for k, v in got.items()
+            if k.startswith("g")} == tokens_of(solo)
+    assert eng.stats()["sampled_requests"] == 3
+
+
+def test_preempt_and_replay_reproduce_sampled_tokens():
+    """Full preempt() mid-decode, twice, with chunked prefill and async
+    dispatch: replay re-seeds each journaled chain and the final streams
+    are bit-identical to an undisturbed run (journal cross-checks every
+    replayed token on the way)."""
+    base = _run(sampled_reqs(6, new_tokens=8))
+    eng, clock = make_engine(slots=3, max_len=32, async_dispatch=True,
+                             prefill_chunk=4)
+    sim = Simulator(eng, staggered_trace(sampled_reqs(6, new_tokens=8),
+                                         gap=1.0), clock)
+    for cut in (5, 11):
+        for _ in range(cut):
+            sim._deliver_due()
+            if eng.busy:
+                eng.step()
+            clock.advance(1.0)
+        assert eng.preempt()                  # something was in flight
+    sim.run()
+    assert tokens_of(eng) == tokens_of(base)
+
+
+def test_slot_preempt_to_back_of_queue_replays_the_chain():
+    """Single-slot preempt-and-requeue (the SLO demotion move): the victim
+    replays after the queue drains, re-seeded, bit-identical."""
+    base = _run(sampled_reqs(4, new_tokens=8))
+    eng, clock = make_engine(slots=3, max_len=32)
+    sim = Simulator(eng, staggered_trace(sampled_reqs(4, new_tokens=8),
+                                         gap=1.0), clock)
+    for _ in range(7):
+        sim._deliver_due()
+        if eng.busy:
+            eng.step()
+        clock.advance(1.0)
+    assert eng.preempt_slot(0, front=False) is not None
+    sim.run()
+    assert tokens_of(eng) == tokens_of(base)
+
+
+def test_journal_records_sampling_and_rejects_conflicting_reopen():
+    """The journal pins each request's SamplingParams at first admission;
+    a replay that re-opens under different params is a correctness bug and
+    must raise, not silently fork the stream."""
+    j = RequestJournal()
+    sp = SamplingParams(temperature=0.8, top_p=0.9, seed=42).astuple()
+    rec = j.open("r", [1, 2], 4, sampling=sp)
+    assert rec.sampling == sp
+    assert j.open("r", [1, 2], 4, sampling=sp) is rec      # replay: same id
+    with pytest.raises(ValueError):
+        j.open("r", [1, 2], 4, sampling=None)
+    assert j.open("g", [1, 2], 4).sampling is None
+
+
+def test_windowed_sampled_parity_paged_ring_vs_lane_ring():
+    """Sampling composes with sliding-window serving: ring block tables
+    (paged) and the lane ring cache emit the same sampled stream while
+    recycling pages past the window."""
+    cfg0, params = smoke_params("granite_3_2b")
+    cfg = dataclasses.replace(cfg0, name=f"{cfg0.name}-swa8",
+                              sliding_window=8)
+
+    def run(paged):
+        clock = FakeClock()
+        eng = ContinuousBatchingEngine(
+            cfg, params, slots=2, max_len=36, clock=clock, page_size=8,
+            paged=paged, lane_batch=CANONICAL["lane_batch"],
+            device_len=CANONICAL["device_len"])
+        Simulator(eng, staggered_trace(
+            sampled_reqs(4, prompt_len=14, new_tokens=12, seed0=300),
+            gap=1.0), clock).run()
+        return eng
+
+    paged_eng, lane_eng = run(None), run(False)
+    assert paged_eng.stats()["backend"] == "paged"
+    assert tokens_of(paged_eng) == tokens_of(lane_eng)
+    assert paged_eng.pages_recycled > 0
+
+
+def test_cluster_slo_preempt_and_requeue_replays_sampled_chain():
+    """The PR 6 SLO demotion under sampling: a deadline-busted *sampled*
+    decode is preempted, requeued behind the followers, replayed from its
+    journaled seed — and still emits exactly the solo-run stream."""
+    sp = SamplingParams(temperature=0.9, top_p=0.9, seed=77)
+
+    def doomed():
+        return Request(id="long", prompt=[3, 4, 5], max_new_tokens=16,
+                       sampling=dataclasses.replace(sp))
+
+    cluster, clock = make_cluster(pool_pages=48, page_size=8,
+                                  policy=SchedPolicy(preempt_busted=True))
+    eng = add_smoke_engine(cluster, name="g", namespace="granite", slots=1,
+                           max_len=40)
+    first = doomed()
+    first.slo = SLO(ttft=4.0, tpot=0.5)
+    trace = tag_engine(burst_trace(
+        [first] + make_requests(2, prompt_len=3, new_tokens=4, prefix="f")),
+        "g")
+    ClusterSimulator(cluster, trace, clock).run()
+    assert cluster.slo_preempts == 1
+    assert cluster.journal.journal("g").get("long").sampling == sp.astuple()
+
+    iso, iclock = make_engine(slots=1, max_len=40)
+    Simulator(iso, burst_trace(
+        [doomed()] + make_requests(2, prompt_len=3, new_tokens=4,
+                                   prefix="f")), iclock).run()
+    assert tokens_of(eng) == tokens_of(iso)
+
+    greedy, gclock = make_engine(slots=1, max_len=40)
+    Simulator(greedy, burst_trace(
+        [Request(id="long", prompt=[3, 4, 5], max_new_tokens=16)]),
+        gclock).run()
+    assert tokens_of(iso)["long"] != tokens_of(greedy)["long"]
+
+
+# ---------------------------------------------------------------------------
+# load generation
+
+
+def test_open_loop_sampling_seeds_deterministic_and_gated():
+    """Sampling tenants draw a fresh per-request seed from the mix RNG —
+    deterministically (same trace seed ⇒ same seeds) and *only* for
+    sampling tenants, so greedy traces consume the exact pre-sampling RNG
+    stream."""
+    spec = TenantSpec(engine="e", sampling=SamplingParams(temperature=0.7))
+    a = list(open_loop_trace([spec], n_requests=24, rate=5.0, seed=3))
+    b = list(open_loop_trace([spec], n_requests=24, rate=5.0, seed=3))
+    assert ([x.request.sampling for x in a]
+            == [x.request.sampling for x in b])
+    seeds = {x.request.sampling.seed for x in a}
+    assert len(seeds) == 24                   # distinct per request
+    assert all(x.request.sampling.temperature == 0.7 for x in a)
+
+    g = list(open_loop_trace([TenantSpec(engine="e")], n_requests=24,
+                             rate=5.0, seed=3))
+    assert all(x.request.sampling is None for x in g)
+    # arrival times come from the arrival-process RNG, which the seed draws
+    # never touch — and the first request predates any seed draw entirely
+    assert [x.time for x in g] == [x.time for x in a]
+    assert g[0].request.prompt == a[0].request.prompt
+
+
+def test_open_loop_sampled_cluster_runs_bit_identical():
+    """End to end at small scale: a bursty open-loop mix with a sampled
+    tenant, driven twice through fresh clusters, emits bit-identical
+    token streams."""
+    tenants = [
+        TenantSpec(engine="g", share=1.0, prompt_len=(4, 10),
+                   new_tokens=(3, 8), slo=SLO(ttft=25.0, tpot=4.0),
+                   sampling=SamplingParams(temperature=0.8, top_k=40,
+                                           top_p=0.95)),
+        TenantSpec(engine="g", share=0.5, prompt_len=(4, 10),
+                   new_tokens=(3, 8)),
+    ]
+
+    def drive():
+        cluster, clock = make_cluster(
+            pool_pages=48, page_size=8,
+            policy=SchedPolicy(scheduler="drr", shed_busted=True,
+                               preempt_busted=True))
+        eng = add_smoke_engine(cluster, name="g", namespace="granite",
+                               slots=2, max_len=40, queue_capacity=16)
+        trace = open_loop_trace(tenants, n_requests=60, rate=8.0, seed=5,
+                                process="bursty")
+        rep = ClusterSimulator(cluster, trace, clock).run(max_steps=100_000)
+        return rep, tokens_of(eng)
+
+    rep1, tok1 = drive()
+    rep2, tok2 = drive()
+    assert tok1 and tok1 == tok2
+    assert (rep1.elapsed, rep1.steps, rep1.tokens_generated,
+            rep1.rejected) == (rep2.elapsed, rep2.steps,
+                               rep2.tokens_generated, rep2.rejected)

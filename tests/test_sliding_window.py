@@ -35,8 +35,7 @@ from repro.serve.engine import ContinuousBatchingEngine
 from repro.serve.sim import ClusterSimulator, shared_prefix_requests
 
 
-def _tokens(eng):
-    return {r.id: tuple(r.tokens) for r in eng.completed}
+from engine_sim import tokens_of as _tokens  # shared across the suites
 
 
 def swa_engine(window: int, *, slots: int = 2, max_len: int = 36,

@@ -28,6 +28,10 @@ Checks, failing the build with a listing of every violation:
      decimal figures on lines mentioning TTFT or goodput (``98.0``,
      ``2.62``) must equal a leaf rounded to the quoted precision — the
      open-loop SLO numbers stay as fresh as the speedups.
+
+   The numeric sweep walks every leaf of the JSON generically, so new
+   bench sections (e.g. the ``sampling`` determinism report) are covered
+   the moment ``make bench-json`` commits them — no per-key plumbing.
 """
 
 from __future__ import annotations
@@ -50,7 +54,7 @@ _EXTERNAL = ("http://", "https://", "mailto:")
 DOC_MODULES = (
     "repro.serve.cluster", "repro.serve.engine", "repro.serve.loadgen",
     "repro.serve.metrics", "repro.serve.paged", "repro.serve.pages",
-    "repro.serve.sim",
+    "repro.serve.sampling", "repro.serve.sim",
     "repro.kernels.paged_attention.kernel",
     "repro.kernels.paged_attention.ops",
     "repro.kernels.paged_attention.ref",
