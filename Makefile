@@ -5,6 +5,8 @@
 #   make test-all     full suite including subprocess multi-device + sweeps
 #   make bench-serve  arrivals-trace serving benchmark (continuous vs sequential)
 #   make sim-smoke    fast open-loop smoke: seeded 1k-request trace, < 10 s
+#   make chaos-smoke  fast fault-injection smoke: seeded 1k-request trace
+#                     under a nonzero fault rate, bit-identity asserted, < 10 s
 #   make docs-check   intra-repo links in README/docs + serve/* docstrings
 #
 # bench-serve forwards extra flags given after `--` (and anything in
@@ -19,7 +21,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 BENCH_PASSTHRU = $(filter-out bench-serve,$(MAKECMDGOALS))
 
 .PHONY: test-fast test-all bench-serve bench-json bench-table docs-check \
-	sim-smoke
+	sim-smoke chaos-smoke
 
 # Fast tier compiles at XLA opt level 0: the suite is compile-bound (tiny
 # smoke models, hundreds of small programs) and every correctness assertion
@@ -56,6 +58,8 @@ bench-json:
 		--open-loop --json --bench-json
 	$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
 		--open-loop-rate 40 --sampling --json --bench-json
+	$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
+		--open-loop-rate 40 --chaos --json --bench-json
 
 # fast-tier open-loop smoke: a seeded 1k-request trace through the full
 # SLO-aware pipeline (loadgen -> cluster -> metrics), < 10 s on CPU
@@ -64,6 +68,15 @@ sim-smoke:
 		$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
 		--open-loop 1000 --open-loop-skip-flat --json > /dev/null
 	@echo "sim-smoke: 1k-request open-loop trace OK"
+
+# fast-tier chaos smoke: the same seeded 1k-request trace served under a
+# nonzero fault rate (all 7 kinds) — completed outputs are asserted
+# bit-identical to the fault-free run, nothing lost or double-completed
+chaos-smoke:
+	XLA_FLAGS="--xla_backend_optimization_level=0 $$XLA_FLAGS" \
+		$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
+		--chaos 1000 --chaos-skip-twin --json > /dev/null
+	@echo "chaos-smoke: 1k-request faulted trace bit-identical OK"
 
 # regenerate the README benchmark table from the committed BENCH_serve.json
 # (docs-check fails when the two drift, so PRs stop hand-editing numbers)

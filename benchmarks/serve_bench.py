@@ -37,6 +37,15 @@ overlaps them (see :class:`repro.serve.sim.Simulator`). Modes:
   sampled runs are asserted bit-identical, sampled streams must diverge
   from a greedy drive of the byte-identical arrivals, and the greedy
   control tenant's streams must not.
+* ``--chaos [N]`` — chaos-tolerant serving: the sampling topology driven
+  fault-free, then under a seeded
+  :class:`~repro.serve.chaos.FaultPlan` (device-step failures, corrupted
+  tokens, NaN logits, allocation failures, engine crashes, bank
+  power-faults, prefix drops), then under the same plan again. Built-in
+  assertions: completed requests are bit-identical to the fault-free
+  run, no request is lost or double-completed, and the two same-seed
+  chaos runs agree end to end. Reports recovery overhead and goodput
+  retention under faults.
 * ``--multi-model`` — the PR 4 cluster workload: two models / three
   engines (two replicas of one model sharing a namespace, plus a second
   model) on one ``ServeCluster`` — one shared ``PagePool``/``PageTable``
@@ -792,6 +801,208 @@ def run_sampling(args) -> tuple[dict, float]:
     return out, frac
 
 
+def run_chaos(args) -> tuple[dict, float]:
+    """Chaos-tolerant serving at open-loop scale.
+
+    The ``run_sampling`` topology (three engines, hot/nucleus/greedy
+    tenants, full SLO-aware policy) is driven three times over the
+    byte-identical arrival sequence:
+
+    * fault-free — the reference run;
+    * chaos — a seeded :class:`~repro.serve.chaos.FaultPlan` injects
+      device-step failures, corrupted tokens, NaN logits, page-allocation
+      failures, engine crashes, bank power-faults, and prefix-match drops
+      while the cluster recovers (retry-with-backoff, corruption
+      quarantine + journal replay, watchdog-gated crash rebuild);
+    * chaos again, same seed — the determinism control.
+
+    Built-in assertions (the tentpole invariant): every request completed
+    by both the fault-free and the chaos run has bit-identical tokens;
+    within each run every submitted request is accounted exactly once
+    (completed + shed + rejected, no duplicates); and the two same-seed
+    chaos runs are bit-identical end to end, fault schedule included.
+    Reported: injections by kind, recovery counters (retries, replays,
+    rebuilds), recovery overhead (extra sim-time under faults), and
+    goodput retention (chaos goodput / fault-free goodput).
+    """
+    from repro.runtime.ft import FTConfig
+    from repro.serve.chaos import FaultPlan, FaultSpec
+    from repro.serve.cluster import SchedPolicy, ServeCluster
+    from repro.serve.loadgen import TenantSpec, open_loop_trace
+    from repro.serve.metrics import SLO, ServeMetrics
+    from repro.serve.sampling import SamplingParams
+    from repro.serve.sim import Arrival, ClusterSimulator
+
+    n, rate = args.chaos, args.open_loop_rate
+    cfg_a = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    cfg_b = (configs.smoke(args.arch_b) if args.smoke
+             else configs.get(args.arch_b))
+    params_a = P.init_tree(registry.decls(cfg_a), jax.random.key(args.seed))
+    params_b = P.init_tree(registry.decls(cfg_b),
+                           jax.random.key(args.seed + 1))
+
+    hot = SamplingParams(temperature=0.8, top_k=40, top_p=0.95)
+    tenants = [
+        TenantSpec(engine="rep-a", share=1.0, prompt_len=(6, 18),
+                   new_tokens=(4, 10), prefix_len=8, prefix_seed=7,
+                   slo=SLO(ttft=25.0, tpot=4.0), sampling=hot),
+        TenantSpec(engine="rep-b", share=1.0, prompt_len=(6, 18),
+                   new_tokens=(4, 10), prefix_len=8, prefix_seed=7,
+                   slo=SLO(ttft=25.0, tpot=4.0)),
+        TenantSpec(engine="alt", share=0.5, prompt_len=(4, 12),
+                   new_tokens=(16, 28), slo=SLO(ttft=25.0, tpot=1.0)),
+    ]
+    max_len = {"rep-a": 32, "rep-b": 32, "alt": 48}
+    ps = 8
+    pool_pages = sum(args.slots * -(-m // ps) for m in max_len.values()) + 24
+    base = [(a.time, a.request.id, tuple(a.request.prompt),
+             a.request.max_new_tokens, a.request.slo, a.request.sampling,
+             a.engine)
+            for a in open_loop_trace(tenants, n_requests=n, rate=rate,
+                                     seed=args.seed,
+                                     process=args.open_loop_process)]
+    # modest per-point rates; crashes are budgeted (each one costs an
+    # exponentially growing restart backoff, so an unbounded crash count
+    # would spend the whole run waiting out restarts)
+    spec = FaultSpec(step_fail=0.01, token_corrupt=0.01, nan_logits=0.01,
+                     alloc_fail=0.002, engine_crash=0.002, bank_fault=0.004,
+                     prefix_drop=0.05)
+    fault_budget = {"engine_crash": 4, "bank_fault": 12}
+
+    def drive(plan):
+        clock = FakeClock()
+        cluster = ServeCluster(
+            pool_pages=pool_pages, page_size=ps, clock=clock,
+            policy=SchedPolicy(scheduler="drr", shed_busted=True,
+                               preempt_busted=True),
+            chaos=plan,
+            watchdog=(FTConfig(max_restarts=64, backoff_base_s=1.0)
+                      if plan is not None else None))
+        for name, cfg, params, ns in (
+                ("rep-a", cfg_a, params_a, cfg_a.name),
+                ("rep-b", cfg_a, params_a, cfg_a.name),
+                ("alt", cfg_b, params_b, cfg_b.name)):
+            cluster.add_engine(cfg, params, name=name, namespace=ns,
+                               slots=args.slots, max_len=max_len[name],
+                               prefill_chunk=args.prefill_chunk,
+                               queue_capacity=args.queue_capacity)
+        trace = (Arrival(t, Request(id=rid, prompt=list(p),
+                                    max_new_tokens=m, slo=slo, sampling=sp),
+                         e)
+                 for t, rid, p, m, slo, sp, e in base)
+        sim = ClusterSimulator(cluster, trace, clock,
+                               step_time=args.step_time,
+                               dispatch_time=args.dispatch_time)
+        w0 = time.perf_counter()
+        report = sim.run(max_steps=5_000_000)
+        wall = time.perf_counter() - w0
+        metrics = ServeMetrics()
+        tokens = {}
+        for eng in cluster.engines.values():
+            metrics.observe_all(eng.completed)
+            tokens.update((r.id, tuple(r.tokens)) for r in eng.completed)
+        # accounting: every submitted request lands in exactly one bucket
+        done = sum(len(e.completed) for e in cluster.engines.values())
+        dup = done - len(tokens)
+        if dup:
+            raise AssertionError(
+                f"{dup} requests completed more than once under faults — "
+                "crash re-admission must never duplicate finished work")
+        total = done + report.rejected + report.shed
+        if total != n:
+            raise AssertionError(
+                f"request accounting broke under faults: {done} completed "
+                f"+ {report.rejected} rejected + {report.shed} shed = "
+                f"{total} != {n} submitted — work was lost")
+        return (report, metrics.summary(elapsed=report.elapsed),
+                tokens, cluster, wall)
+
+    rep0, sum0, tok0, cl0, wall0 = drive(None)
+    plan1 = FaultPlan(args.seed, spec, budget=dict(fault_budget))
+    rep1, sum1, tok1, cl1, wall1 = drive(plan1)
+
+    def digest(report, summary, tokens, cluster):
+        return (report.elapsed, report.steps, report.tokens_generated,
+                report.rejected, report.shed, summary, tokens,
+                cluster.stats()["faults"])
+
+    if not args.chaos_skip_twin:
+        plan2 = FaultPlan(args.seed, spec, budget=dict(fault_budget))
+        rep2, sum2, tok2, cl2, _ = drive(plan2)
+        if digest(rep1, sum1, tok1, cl1) != digest(rep2, sum2, tok2, cl2):
+            raise AssertionError(
+                "chaos run is not deterministic: two same-seed fault "
+                "schedules diverged — every injection draw and every "
+                "recovery must be seeded")
+    common = tok0.keys() & tok1.keys()
+    diverged = [i for i in sorted(common) if tok0[i] != tok1[i]]
+    if diverged:
+        raise AssertionError(
+            f"{len(diverged)} requests completed with different tokens "
+            f"under faults (e.g. {diverged[:3]}) — recovery must replay "
+            "bit-identically")
+    faults = cl1.stats()["faults"]
+    if n >= 1_000:
+        quiet = [k for k, c in plan1.counts.items() if c == 0]
+        assert not quiet, f"fault kinds never injected at scale: {quiet}"
+        assert faults["replays"] > 0, "no corruption quarantine replayed"
+        assert faults["rebuilds"] > 0, "no crash rebuild engaged"
+
+    goodput_retention = (sum1["goodput"] / sum0["goodput"]
+                         if sum0["goodput"] else 0.0)
+    overhead = ((rep1.elapsed - rep0.elapsed) / rep0.elapsed
+                if rep0.elapsed else 0.0)
+
+    def mode(tag, report, summary, cluster, wall):
+        return {
+            "mode": tag, "elapsed_sim": report.elapsed,
+            "tokens": report.tokens_generated,
+            "served": summary["completed"], "rejected": report.rejected,
+            "shed": report.shed,
+            "slo_attainment": round(summary["slo_attainment"], 4),
+            "goodput_tok_per_sim_s": round(summary["goodput"], 4),
+            "throughput_tok_per_sim_s": round(report.throughput, 4),
+            "wall_s": round(wall, 3),
+        }
+
+    out = {"arch": cfg_a.name, "arch_b": cfg_b.name, "requests": n,
+           "rate": rate, "process": args.open_loop_process, "engines": 3,
+           "slots": args.slots, "queue_capacity": args.queue_capacity,
+           "page_size": ps, "prefill_chunk": args.prefill_chunk,
+           "dispatch_time": args.dispatch_time, "step_time": args.step_time,
+           "fault_spec": dataclasses.asdict(spec),
+           "fault_budget": fault_budget,
+           "injected": dict(plan1.counts),
+           "recovery": {k: faults[k] for k in
+                        ("step_faults", "alloc_faults", "token_faults",
+                         "replays", "retries", "crashes", "bank_faults",
+                         "rebuilds")},
+           "fault_free": mode("fault_free", rep0, sum0, cl0, wall0),
+           "chaos": mode("chaos", rep1, sum1, cl1, wall1),
+           "bit_identity": {
+               "common_served": len(common),
+               "diverged_vs_fault_free": 0,
+               "duplicated": 0, "lost": 0,
+           },
+           "recovery_overhead_frac": round(overhead, 4),
+           "goodput_retention": round(goodput_retention, 4),
+           "deterministic": not args.chaos_skip_twin}
+    if not args.json:
+        for m in (out["fault_free"], out["chaos"]):
+            print(f"{m['mode']:>10}: {m['served']} served / "
+                  f"{m['rejected']} rejected / {m['shed']} shed of {n}; "
+                  f"{m['tokens']} tokens in {m['elapsed_sim']:.0f} sim-s")
+        inj = ", ".join(f"{k}={c}" for k, c in sorted(plan1.counts.items())
+                        if c)
+        print(f"injected: {inj}")
+        print(f"recovery: {faults['retries']} retries, "
+              f"{faults['replays']} replays, {faults['rebuilds']} rebuilds; "
+              f"{len(common)} common requests bit-identical; "
+              f"overhead {overhead:+.1%} sim-time, "
+              f"goodput retention {goodput_retention:.1%}")
+    return out, goodput_retention
+
+
 def run_kernel_bench(cfg, args) -> tuple[dict, float]:
     """Microbenchmark the fused paged-attention kernel vs its reference.
 
@@ -908,6 +1119,17 @@ def main(argv=None):
                          "stochastic tenants — two same-seed runs must be "
                          "bit-identical, sampled streams must diverge from "
                          "greedy, greedy neighbours must not")
+    ap.add_argument("--chaos", type=int, nargs="?", const=2000,
+                    default=0, metavar="N",
+                    help="chaos workload: N open-loop arrivals served "
+                         "fault-free, under a seeded fault plan, and under "
+                         "the same plan again — bit-identity, single "
+                         "accounting, and schedule determinism are "
+                         "asserted before any number is reported")
+    ap.add_argument("--chaos-skip-twin", action="store_true",
+                    help="skip the same-seed determinism twin drive "
+                         "(smoke tier: fault-free vs chaos bit-identity "
+                         "only)")
     ap.add_argument("--kernel-bench", action="store_true",
                     help="microbenchmark the paged-attention kernel vs ref")
     ap.add_argument("--kernel-iters", type=int, default=20)
@@ -926,6 +1148,9 @@ def main(argv=None):
     if args.kernel_bench:
         out, speedup = run_kernel_bench(cfg, args)
         tag, key = "__kernel", "kernel"
+    elif args.chaos:
+        out, speedup = run_chaos(args)
+        tag, key = "__chaos", "chaos"
     elif args.sampling:
         out, speedup = run_sampling(args)
         tag, key = "__sampling", "sampling"

@@ -1,9 +1,15 @@
 """Sharded checkpointing with elastic resharding.
 
 Format: one directory per step — ``manifest.json`` (treedef, shapes, dtypes,
-step, user metadata) + one ``.npy`` per leaf. Writes are atomic (tmp dir +
-rename) so a mid-save crash never corrupts the latest checkpoint; saves can
-run on a background thread (overlaps the next train step).
+per-leaf byte counts and CRCs, step, user metadata) + one ``.npy`` per leaf.
+Writes are atomic (tmp dir + rename; the manifest is written last, so a
+half-written tmp dir is never mistaken for a checkpoint, and an existing
+step directory is renamed aside rather than deleted before the swap) so a
+mid-save crash never corrupts the latest checkpoint; saves can run on a
+background thread (overlaps the next train step). ``restore`` verifies
+every leaf against the manifest — missing file, size mismatch, or CRC
+mismatch raises a clear "partial/corrupted" error instead of silently
+loading damaged weights (the engine-rebuild path leans on this).
 
 Elastic restore: leaves are materialized with ``jax.device_put`` against the
 TARGET mesh's shardings — a checkpoint written on (2,16,16) restores onto
@@ -17,6 +23,7 @@ import json
 import pathlib
 import shutil
 import threading
+import zlib
 from typing import Any
 
 import jax
@@ -85,16 +92,30 @@ def save(path: str | pathlib.Path, tree: Any, *, step: int,
             "step": step,
             "metadata": metadata or {},
             "leaves": [
-                {"name": n, "shape": list(a.shape), "dtype": dt}
+                {"name": n, "shape": list(a.shape), "dtype": dt,
+                 "nbytes": int(a.nbytes),
+                 "crc32": zlib.crc32(np.ascontiguousarray(a).tobytes())}
                 for n, (a, dt) in zip(names, savable)
             ],
         }
         for n, (a, _) in zip(names, savable):
             np.save(tmp / f"{n}.npy", a)
+        # manifest last: a tmp dir interrupted mid-write has no manifest
+        # and is invisible to latest_step/restore
         (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
         if final.exists():
-            shutil.rmtree(final)
-        tmp.rename(final)
+            # never delete the old step before the new one is in place: a
+            # crash between rmtree and rename must not lose the latest
+            # checkpoint. The dot-prefixed name hides the old copy from
+            # latest_step's step_* glob during the swap.
+            old = path / f".old_step_{step:09d}"
+            if old.exists():
+                shutil.rmtree(old)
+            final.rename(old)
+            tmp.rename(final)
+            shutil.rmtree(old)
+        else:
+            tmp.rename(final)
 
     if async_:
         t = threading.Thread(target=_write, daemon=True)
@@ -131,11 +152,39 @@ def restore(path: str | pathlib.Path, tree_like: Any, *, step: int | None = None
     if want != have:
         raise ValueError(f"checkpoint/tree mismatch: only-ckpt={want-have} "
                          f"only-tree={have-want}")
-    dtype_of = {e["name"]: e["dtype"] for e in manifest["leaves"]}
+    entry_of = {e["name"]: e for e in manifest["leaves"]}
     shard_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
                     else [None] * len(names))
     leaves = []
     for n, sh in zip(names, shard_leaves):
-        a = _from_saved(np.load(d / f"{n}.npy"), dtype_of[n])
+        ent = entry_of[n]
+        f = d / f"{n}.npy"
+        if not f.exists():
+            raise ValueError(
+                f"checkpoint {d} is corrupt: leaf file {n}.npy missing "
+                "(partial write?)")
+        try:
+            raw = np.load(f)
+        except Exception as e:
+            raise ValueError(
+                f"checkpoint {d} is corrupt: leaf {n} unreadable "
+                f"(partial write?): {e}") from e
+        # integrity checks against the manifest (older checkpoints
+        # without nbytes/crc32 fields skip them — shape is always known)
+        if list(raw.shape) != list(ent["shape"]):
+            raise ValueError(
+                f"checkpoint {d} is corrupt: leaf {n} has shape "
+                f"{list(raw.shape)}, manifest says {ent['shape']}")
+        if "nbytes" in ent and int(raw.nbytes) != int(ent["nbytes"]):
+            raise ValueError(
+                f"checkpoint {d} is corrupt: leaf {n} is {raw.nbytes} "
+                f"bytes, manifest says {ent['nbytes']} (partial write?)")
+        if "crc32" in ent:
+            crc = zlib.crc32(np.ascontiguousarray(raw).tobytes())
+            if crc != int(ent["crc32"]):
+                raise ValueError(
+                    f"checkpoint {d} is corrupt: leaf {n} CRC mismatch "
+                    f"({crc:#010x} != {int(ent['crc32']):#010x})")
+        a = _from_saved(raw, ent["dtype"])
         leaves.append(jax.device_put(a, sh) if sh is not None else a)
     return treedef.unflatten(leaves), step, manifest["metadata"]

@@ -39,6 +39,7 @@ single durable root to enumerate in-flight work from.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import enum
 import math
@@ -81,6 +82,15 @@ class FTController:
         self.restarts = 0
         self.events: list[tuple[float, str]] = []
 
+    # -- membership ------------------------------------------------------
+    def add_worker(self) -> int:
+        """Register one more worker and return its id — dynamic
+        registration for controllers built before their workers exist
+        (e.g. a serving cluster adding engines after construction)."""
+        wid = max(self.workers, default=-1) + 1
+        self.workers[wid] = WorkerInfo(last_heartbeat=self.clock())
+        return wid
+
     # -- reporting -------------------------------------------------------
     def report_heartbeat(self, worker: int):
         w = self.workers[worker]
@@ -94,6 +104,17 @@ class FTController:
         w.step_times.append(seconds)
         if len(w.step_times) > self.cfg.window:
             w.step_times.pop(0)
+
+    def report_failure(self, worker: int, reason: str = "fault"):
+        """Coordinator-observed failure: declare ``worker`` dead now,
+        without waiting out the heartbeat timeout (e.g. an engine crash
+        the serving cluster detected synchronously). A later heartbeat
+        rejoins it, exactly like a timeout death."""
+        w = self.workers[worker]
+        if w.state is not WorkerState.DEAD:
+            w.state = WorkerState.DEAD
+            w.slow_streak = 0
+            self._log(f"worker {worker} declared dead ({reason})")
 
     # -- detection --------------------------------------------------------
     def tick(self) -> dict:
@@ -230,11 +251,24 @@ class RequestJournal:
     prompt reproduces the original tokens bit-for-bit; ``record_token``
     cross-checks this whenever a replayed slot overlaps its pre-preemption
     progress.
+
+    ``horizon`` bounds memory in long open-loop runs: when more than
+    ``horizon`` *completed* records are retained, the oldest-completed
+    ones are auto-evicted (in-flight records are never evicted — the
+    replay-state invariant holds unconditionally). ``None`` retains
+    everything, the pre-horizon behaviour.
     """
 
-    def __init__(self):
+    def __init__(self, horizon: int | None = None):
+        if horizon is not None and horizon < 0:
+            raise ValueError("horizon must be >= 0 (None = unbounded)")
+        self.horizon = horizon
         self._records: dict[str, SlotRecord] = {}
         self._seq = 0
+        # completion order, for horizon eviction (may hold ids already
+        # dropped by an explicit evict(); the auto-evict loop skips those)
+        self._done_order: collections.deque[str] = collections.deque()
+        self.auto_evicted = 0
 
     def open(self, request_id: str, prompt, max_new_tokens: int,
              sampling: tuple | None = None) -> SlotRecord:
@@ -321,17 +355,67 @@ class RequestJournal:
         rec.generated.append(token)
 
     def complete(self, request_id: str) -> None:
-        self._records[request_id].completed = True
+        rec = self._records[request_id]
+        if not rec.completed:
+            rec.completed = True
+            self._done_order.append(request_id)
+            if self.horizon is not None:
+                self._trim()
+
+    def _trim(self) -> None:
+        live = sum(1 for rid in self._done_order
+                   if self._records.get(rid) is not None
+                   and self._records[rid].completed)
+        while live > self.horizon and self._done_order:
+            rid = self._done_order.popleft()
+            rec = self._records.get(rid)
+            if rec is None or not rec.completed:
+                continue               # explicitly evicted, or re-opened
+            del self._records[rid]
+            self.auto_evicted += 1
+            live -= 1
 
     def get(self, request_id: str) -> SlotRecord:
         return self._records[request_id]
 
+    def has(self, request_id: str) -> bool:
+        """True when a record exists for ``request_id`` — i.e. the request
+        has been admitted at least once. Schedulers use this to exempt
+        replayed work (preempted, crash-recovered, or corruption-
+        quarantined) from admission-control shedding: a request holding
+        journal state must finish, or its record would sit in-flight
+        forever and resurrect at the next crash rebuild."""
+        return request_id in self._records
+
     def evict(self, request_id: str) -> None:
         """Drop a completed record (post-acknowledgement cleanup). Evicting
-        an in-flight record would lose replay state, so that is an error."""
-        if not self._records[request_id].completed:
+        an in-flight record would lose replay state, so that is an error;
+        an id the horizon already auto-evicted is silently gone."""
+        rec = self._records.get(request_id)
+        if rec is None:
+            return                     # horizon got there first
+        if not rec.completed:
             raise ValueError(f"request {request_id!r} is still in flight")
         del self._records[request_id]
+
+    def size(self) -> dict:
+        """Retention counters for ``engine.stats()``: live record and
+        token counts, an order-of-magnitude byte estimate, and how many
+        completed records the horizon auto-evicted."""
+        tokens = sum(len(r.prompt) + len(r.generated) + len(r.prior)
+                     for r in self._records.values())
+        return {
+            "records": len(self._records),
+            "in_flight": sum(1 for r in self._records.values()
+                             if not r.completed),
+            "tokens": tokens,
+            # ints in CPython are ~28 bytes; the record object + dict
+            # slot overhead lands around 400 — a sizing signal, not an
+            # exact accounting
+            "approx_bytes": 400 * len(self._records) + 28 * tokens,
+            "auto_evicted": self.auto_evicted,
+            "horizon": self.horizon,
+        }
 
     def incomplete(self) -> list[SlotRecord]:
         """In-flight records, oldest first — the replay queue."""
@@ -352,16 +436,19 @@ class ClusterJournal:
     of model A must never be validated against model B's tokens. The
     cluster-level views (:meth:`incomplete` / :meth:`completed`) aggregate
     per engine name, which is what a coordinator restarts from after a
-    cluster-wide preemption.
+    cluster-wide preemption. ``horizon`` is handed to every per-engine
+    journal (completed-record retention bound, see
+    :class:`RequestJournal`).
     """
 
-    def __init__(self):
+    def __init__(self, horizon: int | None = None):
+        self.horizon = horizon
         self._journals: dict[str, RequestJournal] = {}
 
     def journal(self, engine: str) -> RequestJournal:
         """The (created-on-first-use) journal for ``engine``."""
         if engine not in self._journals:
-            self._journals[engine] = RequestJournal()
+            self._journals[engine] = RequestJournal(horizon=self.horizon)
         return self._journals[engine]
 
     def engines(self) -> list[str]:

@@ -78,12 +78,18 @@ from typing import Callable
 from repro.core.power import PowerState
 from repro.models import registry
 from repro.models.config import ModelConfig
-from repro.runtime.ft import ClusterJournal
+from repro.runtime.ft import ClusterJournal, FTConfig, FTController
+from repro.serve.chaos import AllocFault, DeviceStepFault
 from repro.serve.engine import SHED, ContinuousBatchingEngine, Request
 from repro.serve.paged import PagePool, pool_signature
 from repro.serve.pages import PageTable
+from repro.serve.sampling import SamplingParams
 
 __all__ = ["PowerBudget", "SchedPolicy", "ServeCluster", "awake_banks"]
+
+# XAIF interrupt lines the fault-recovery layer raises on the platform
+CRASH_LINE = "chaos.engine_crash"    # payload: engine name
+BANK_FAULT_LINE = "chaos.bank_fault"  # payload: (engine name, bank name)
 
 
 def awake_banks(platform) -> int:
@@ -202,7 +208,12 @@ class ServeCluster:
                  capacity_pages: int | None = None,
                  power_budget: PowerBudget | None = None,
                  journal: ClusterJournal | None = None,
-                 policy: SchedPolicy | None = None):
+                 policy: SchedPolicy | None = None,
+                 chaos=None,
+                 watchdog: FTConfig | None = None,
+                 journal_horizon: int | None = None,
+                 max_fault_streak: int = 8,
+                 degrade_streak: int = 3):
         from repro.core.platform import Platform, XHeepConfig
 
         owns_platform = platform is None
@@ -221,7 +232,7 @@ class ServeCluster:
             capacity_pages=(capacity_pages if capacity_pages is not None
                             else pool_pages),
             on_evict=self.pool.release)
-        self.journal = journal or ClusterJournal()
+        self.journal = journal or ClusterJournal(horizon=journal_horizon)
         self.policy = policy or SchedPolicy()
         self.engines: dict[str, ContinuousBatchingEngine] = {}
         self._weights: dict[str, int] = {}
@@ -235,6 +246,40 @@ class ServeCluster:
         self.sheds = 0                 # SLO-busted heads dropped at admission
         self.slo_preempts = 0          # SLO-busting tails demoted to the back
         self.reclaims: dict[str, int] = {}   # namespace -> pages reclaimed
+        # -- fault injection + recovery --------------------------------------
+        # chaos (a repro.serve.chaos.FaultPlan, or None) is shared with
+        # every tenant engine; the cluster additionally draws per-step
+        # crash and bank faults and wires the pool/table hooks
+        self.chaos = chaos
+        if chaos is not None:
+            self.pool.fault_hook = chaos.alloc
+            self.table.fault_hook = chaos.drop_prefix
+        # per-engine watchdog: each tenant is one FTController worker —
+        # heartbeats on every successful step, coordinator-observed
+        # failures on crash, restart_delay() gating every rebuild. Built
+        # whenever fault handling is live (explicit config or any chaos)
+        self.watchdog = (FTController(0, watchdog or FTConfig(),
+                                      clock=clock)
+                         if watchdog is not None or chaos is not None
+                         else None)
+        self.max_fault_streak = max_fault_streak
+        self.degrade_streak = degrade_streak
+        self._watch_ids: dict[str, int] = {}    # engine name -> worker id
+        self._fault_streak: dict[str, int] = {}  # consecutive step faults
+        self._backoff: dict[str, int] = {}      # rounds left to sit out
+        self._down: dict[str, int] = {}         # crashed: rounds to restart
+        self._lost: dict[str, list[Request]] = {}   # queue at crash time
+        self._tenants: dict[str, tuple] = {}    # rebuild recipe per engine
+        # submission log (request handles for crash re-admission); only
+        # kept while fault handling is live, pruned of finished work at
+        # every rebuild
+        self._requests: dict[str, dict[str, Request]] = {}
+        self.step_faults = 0           # device launches that raised
+        self.alloc_faults = 0          # pool allocations that raised
+        self.retries = 0               # engine steps retried after a fault
+        self.crashes = 0               # engines that lost host state
+        self.bank_faults = 0           # bank power-faults applied
+        self.rebuilds = 0              # engines rebuilt from the journal
         if owns_platform:
             # our own platform: the idle bank pool starts gated (same rule
             # the engine applies when it owns its platform)
@@ -281,24 +326,44 @@ class ServeCluster:
                 "namespace peers alias each other's prefix pages, so they "
                 "must share config and weights exactly")
         self._ns_identity[ns] = identity
-        eng = ContinuousBatchingEngine(
-            cfg, params, slots=slots, max_len=max_len,
+        eng = self._build_engine(cfg, params, ns, name,
+                                 dict(slots=slots, max_len=max_len,
+                                      **engine_kwargs))
+        self.engines[name] = eng
+        self._weights[name] = weight
+        self._deficit[name] = 0.0
+        self._tenants[name] = (cfg, params, ns,
+                               dict(slots=slots, max_len=max_len,
+                                    **engine_kwargs))
+        if self.watchdog is not None:
+            self._watch_ids[name] = self.watchdog.add_worker()
+        return eng
+
+    def _build_engine(self, cfg, params, ns: str, name: str,
+                      kwargs: dict) -> ContinuousBatchingEngine:
+        """One construction path for both first build and crash rebuild:
+        the tenant always lands on the cluster's shared resources."""
+        return ContinuousBatchingEngine(
+            cfg, params,
             platform=self.platform, clock=self.clock,
             journal=self.journal.journal(name),
             pool=self.pool, page_table=self.table,
             namespace=ns, name=name,
             admission_hook=self._admission_hook,
             reclaim=self._reclaim,
-            **engine_kwargs)
-        self.engines[name] = eng
-        self._weights[name] = weight
-        self._deficit[name] = 0.0
-        return eng
+            chaos=self.chaos,
+            **kwargs)
 
     def submit(self, name: str, request: Request) -> bool:
         """Enqueue ``request`` on engine ``name`` (engine backpressure
         applies: False = rejected and counted there)."""
-        return self.engines[name].submit(request)
+        ok = self.engines[name].submit(request)
+        if ok and self.watchdog is not None:
+            # keep the client's handle: after a crash the rebuild re-admits
+            # in-flight work onto these exact objects, so arrival times and
+            # completion callbacks survive the engine's death
+            self._requests.setdefault(name, {})[request.id] = request
+        return ok
 
     # -- arbitration -----------------------------------------------------------
 
@@ -311,13 +376,25 @@ class ServeCluster:
         True to admit, False to skip this slot (power vetoes are per-slot
         — another slot's bank may already be awake), None to end the
         engine's admission scan (a spent budget is engine-global), or
-        ``SHED`` to drop the head outright."""
-        if self.policy.shed_busted:
+        ``SHED`` to drop the head outright.
+
+        Graceful degradation under sustained faults: an engine whose
+        fault streak reached ``degrade_streak`` sheds SLO-blown heads
+        even when the policy's ``shed_busted`` is off — recovery steps
+        already charged the backlog's TTFT, so serving a head that can
+        no longer make its target would spend post-fault capacity on
+        worthless work."""
+        degraded = self._fault_streak.get(eng.name, 0) >= self.degrade_streak
+        if self.policy.shed_busted or degraded:
             slo = getattr(request, "slo", None)
-            # a request the scheduler itself demoted already holds journal
-            # state and must finish — shedding applies to fresh heads only
+            # a head holding journal state (scheduler-demoted, crash-
+            # recovered, or corruption-replayed) must finish — shedding it
+            # would leave an in-flight record that the next crash rebuild
+            # resurrects, double-accounting the request. Shedding applies
+            # to fresh heads only
             if (slo is not None and slo.ttft is not None
                     and request.slo_preempts == 0
+                    and not eng.journal.has(request.id)
                     and request.arrival_time is not None
                     and self.clock() - request.arrival_time > slo.ttft):
                 self.sheds += 1
@@ -363,8 +440,10 @@ class ServeCluster:
 
     @property
     def busy(self) -> bool:
-        """True while any tenant has queued or in-flight work."""
-        return any(e.busy for e in self.engines.values())
+        """True while any tenant has queued or in-flight work — including
+        a crashed tenant whose journaled work is waiting out its restart
+        backoff (its slots and queue are empty, but the work is not)."""
+        return bool(self._down) or any(e.busy for e in self.engines.values())
 
     def _preempt_busted(self) -> None:
         """SLO enforcement: demote any decoding request that has already
@@ -393,13 +472,22 @@ class ServeCluster:
                     self.journal.journal(name).note_slo_preempt(req.id)
 
     def step(self) -> bool:
-        """One scheduling round: preempt SLO-busted long tails (if the
-        policy says so), refill every tenant's admission budget — flat
-        WRR grants, or DRR deficits accumulated against each engine's
-        actual ``step_cost()`` — then advance each engine one step (order
-        rotates per round). Returns False when every tenant is idle;
-        raises when queued work exists but the power budget lets nothing
-        run (a budget deadlock — stalling forever would spin silently)."""
+        """One scheduling round: inject any scheduled cluster faults
+        (chaos), preempt SLO-busted long tails (if the policy says so),
+        refill every tenant's admission budget — flat WRR grants, or DRR
+        deficits accumulated against each engine's actual
+        ``step_cost()`` — then advance each engine one step (order
+        rotates per round). A tenant sitting out a fault backoff or a
+        crash-restart delay counts as progress (deliberate idling, not a
+        deadlock); a transient :class:`~repro.serve.chaos.
+        DeviceStepFault` / :class:`~repro.serve.chaos.AllocFault` from an
+        engine step is counted, backed off exponentially (in rounds),
+        and retried — past ``max_fault_streak`` consecutive faults it
+        raises. Returns False when every tenant is idle; raises when
+        queued work exists but the power budget lets nothing run (a
+        budget deadlock — stalling forever would spin silently)."""
+        if self.chaos is not None:
+            self._inject_cluster_faults()
         if self.policy.preempt_busted:
             self._preempt_busted()
         if self.policy.scheduler == "drr":
@@ -423,14 +511,224 @@ class ServeCluster:
             self._rr_offset += 1
         launched = False
         for name in names:
-            launched |= self.engines[name].step()
+            if name in self._down:
+                self._down[name] -= 1
+                if self._down[name] <= 0:
+                    self.rebuild_engine(name)
+                launched = True        # restart progress, not a deadlock
+                continue
+            if self._backoff.get(name, 0) > 0:
+                self._backoff[name] -= 1
+                launched = True        # deliberate fault backoff
+                continue
+            eng = self.engines[name]
+            try:
+                stepped = eng.step()
+            except (DeviceStepFault, AllocFault) as e:
+                self._note_fault(name, e)
+                launched = True        # the retry is scheduled work
+                continue
+            if stepped:
+                self._fault_streak[name] = 0
+            if self.watchdog is not None:
+                # liveness, not throughput: an idle engine heartbeats too
+                self.watchdog.report_heartbeat(self._watch_ids[name])
+            launched |= stepped
         if launched:
             self.steps += 1
         elif self.busy:
             raise RuntimeError(
                 "cluster stalled: queued work but no engine can run — the "
                 "power budget admits nothing (budget deadlock)")
+        if self.watchdog is not None:
+            self._watchdog_tick()
         return launched
+
+    # -- fault injection + recovery --------------------------------------------
+
+    def _inject_cluster_faults(self) -> None:
+        """Draw this round's cluster-level faults (engine crash, bank
+        power-fault) for every live tenant, in registration order — the
+        draw order is deterministic, so two same-seed chaos runs inject
+        the identical schedule."""
+        for name in list(self.engines):
+            if name in self._down:
+                continue
+            if self.chaos.crash(name):
+                self._crash(name, reason="injected crash")
+                continue
+            if self.chaos.bank(name):
+                self._apply_bank_fault(name)
+
+    def _note_fault(self, name: str, exc: Exception) -> None:
+        """Account a transient step/alloc fault and set the engine's
+        exponential backoff (in scheduling rounds — driver-agnostic, so
+        the same recovery runs under a frozen or a simulated clock).
+        Raises once the consecutive-fault streak exceeds
+        ``max_fault_streak``: at that point the fault is not transient
+        and silent spinning would hide it."""
+        if isinstance(exc, DeviceStepFault):
+            self.step_faults += 1
+        else:
+            self.alloc_faults += 1
+        self.retries += 1
+        streak = self._fault_streak.get(name, 0) + 1
+        self._fault_streak[name] = streak
+        if streak > self.max_fault_streak:
+            raise RuntimeError(
+                f"engine {name!r}: {streak} consecutive step faults — "
+                "beyond the transient-retry budget") from exc
+        self._backoff[name] = min(2 ** (streak - 1), 16)
+
+    def _crash(self, name: str, reason: str) -> None:
+        """Kill engine ``name``: all host-side slot state is lost.
+
+        What a real crash loses is the engine process's bookkeeping; the
+        cluster (the coordinator) survives and still owns the shared
+        pool/table/platform, so it sweeps the dead tenant's references —
+        the unretired in-flight step is dropped (its tokens die with the
+        host), every occupied slot is evicted (pool refs, table pins,
+        dedup claims, bank refs all released), and the engine's queue is
+        set aside for re-submission. The watchdog records the death and
+        its ``restart_delay()`` (exponential backoff) gates the rebuild;
+        an exhausted restart budget raises instead of retrying forever.
+        """
+        eng = self.engines[name]
+        self.crashes += 1
+        # the in-flight async step dies with the host process — its token
+        # values were never journaled, so replay regenerates them
+        eng._pending = None
+        eng._prev_nxt = None
+        eng._faulted = []
+        for i, s in enumerate(eng.slots):
+            if s is not None:
+                eng._evict(i)
+        self._lost[name] = list(eng.queue)
+        eng.queue.clear()
+        self.platform.interrupts.fire(CRASH_LINE, name)
+        rounds = 1
+        if self.watchdog is not None:
+            self.watchdog.report_failure(self._watch_ids[name], reason)
+            delay = self.watchdog.restart_delay()
+            if delay is None:
+                raise RuntimeError(
+                    f"engine {name!r}: restart budget exhausted "
+                    f"({self.watchdog.cfg.max_restarts} restarts)")
+            rounds = max(1, int(delay))
+        self._down[name] = rounds
+        self._fault_streak.pop(name, None)
+        self._backoff.pop(name, None)
+
+    def crash_engine(self, name: str, *,
+                     rebuild: bool = True) -> ContinuousBatchingEngine | None:
+        """Kill engine ``name`` (loss of all host-side slot state) and —
+        by default — rebuild it immediately from the journal. Pass
+        ``rebuild=False`` to leave the tenant down and let the cluster
+        step loop restart it after the watchdog backoff. The test
+        entrypoint for crash-recovery scenarios; chaos-injected crashes
+        run the same two halves."""
+        self._crash(name, reason="crash_engine()")
+        if rebuild:
+            return self.rebuild_engine(name)
+        return None
+
+    def rebuild_engine(self, name: str) -> ContinuousBatchingEngine:
+        """Rebuild a crashed tenant and re-admit its in-flight work.
+
+        The new engine lands on the same shared pool/table/platform and
+        the same per-engine journal (same name); its monotone counters,
+        completed list, and id registry carry over from the dead object
+        so cluster-level accounting (and the simulator's per-name delta
+        tracking) stays continuous. Every record in
+        ``journal.incomplete()`` is re-admitted in original
+        ``arrival_seq`` order — onto the client's tracked
+        :class:`~repro.serve.engine.Request` handles where available
+        (arrival times and completion callbacks survive), else onto
+        reconstructed requests — and replays through ``journal.open`` /
+        ``record_token``, which cross-checks every regenerated token
+        against the pre-crash run. Queue residents that were never
+        admitted (no journal record) are re-queued behind them. Shared
+        prefix pages the dead engine published are still table-resident,
+        so replay re-adopts them instead of recomputing."""
+        cfg, params, ns, kwargs = self._tenants[name]
+        old = self.engines[name]
+        eng = self._build_engine(cfg, params, ns, name, dict(kwargs))
+        for attr in ("steps", "tokens_generated", "prompt_tokens_processed",
+                     "prompt_tokens_reused", "stalls", "admission_stalls",
+                     "rematches", "rematched_tokens", "pages_recycled",
+                     "rejected", "shed", "sampled_requests", "token_faults",
+                     "replays"):
+            setattr(eng, attr, getattr(old, attr))
+        eng.completed = old.completed
+        eng._ids = old._ids
+        eng._replay_counts = old._replay_counts
+        self.engines[name] = eng       # same key: dict/rotation order kept
+        tracked = self._requests.get(name, {})
+        for rid in [r for r, req in tracked.items()
+                    if req.finish_time is not None]:
+            del tracked[rid]           # acknowledged: replay never needs it
+        requeued = set()
+        journal = self.journal.journal(name)
+        for rec in journal.incomplete():
+            req = tracked.get(rec.request_id)
+            if req is None:
+                # untracked submission: reconstruct what replay needs from
+                # the journal (the callback/arrival context is gone)
+                req = Request(rec.request_id, rec.prompt, rec.max_new_tokens,
+                              sampling=(SamplingParams(*rec.sampling)
+                                        if rec.sampling else None))
+            req.tokens = []
+            req.admit_time = req.first_token_time = req.finish_time = None
+            if req.arrival_time is None:
+                req.arrival_time = self.clock()
+            eng._ids.add(req.id)
+            eng.queue.append(req)
+            requeued.add(req.id)
+        for req in self._lost.pop(name, []):
+            if req.id in requeued:
+                continue               # preempted resident: already queued
+            eng._ids.add(req.id)
+            eng.queue.append(req)
+        self._down.pop(name, None)
+        self.rebuilds += 1
+        if self.watchdog is not None:
+            # the rebuilt engine's first heartbeat is its rejoin
+            self.watchdog.report_heartbeat(self._watch_ids[name])
+        return eng
+
+    def _apply_bank_fault(self, name: str) -> None:
+        """Power-fault one occupied memory bank of engine ``name``: every
+        slot on it is preempted and requeued at the front (the pre-fault
+        tokens are valid journal state — the flush retires them first),
+        the slots' bank references drop so the domain gates, and a
+        ``chaos.bank_fault`` interrupt fires on the platform fabric. A
+        tenant with no occupied slots absorbs the fault as a no-op."""
+        eng = self.engines[name]
+        occupied = [i for i, s in enumerate(eng.slots) if s is not None]
+        if not occupied:
+            return
+        bank = eng._slot_bank[occupied[0]]
+        victims = [i for i in occupied if eng._slot_bank[i] == bank]
+        # descending seq + front requeue => ascending FIFO order in queue
+        for i in sorted(victims,
+                        key=lambda i: -(eng.slots[i].seq
+                                        if eng.slots[i] is not None else 0)):
+            if eng.slots[i] is not None:
+                eng.preempt_slot(i, front=True)
+        self.bank_faults += 1
+        self.platform.interrupts.fire(BANK_FAULT_LINE, (name, bank))
+
+    def _watchdog_tick(self) -> None:
+        """Run watchdog detection; a tenant declared dead (heartbeat
+        timeout under an advancing clock — e.g. stuck in backoff for
+        longer than the timeout) escalates to the crash path, whose
+        journal rebuild is the recovery for lost liveness too."""
+        result = self.watchdog.tick()
+        by_wid = {wid: n for n, wid in self._watch_ids.items()}
+        for wid in result["dead"]:
+            name = by_wid.get(wid)
+            if name is not None and name not in self._down:
+                self._crash(name, reason="heartbeat timeout")
 
     def run_until_idle(self, max_steps: int = 100_000) -> None:
         """Step until every tenant drains (raises after ``max_steps``)."""
@@ -466,6 +764,22 @@ class ServeCluster:
             "slo_preempts": self.slo_preempts,
             "reclaims": dict(self.reclaims),
             "awake_banks": self.awake_banks(),
+            "faults": {
+                "step_faults": self.step_faults,
+                "alloc_faults": self.alloc_faults,
+                "token_faults": sum(e.token_faults
+                                    for e in self.engines.values()),
+                "replays": sum(e.replays for e in self.engines.values()),
+                "retries": self.retries,
+                "crashes": self.crashes,
+                "bank_faults": self.bank_faults,
+                "rebuilds": self.rebuilds,
+                "down": sorted(self._down),
+                "injected": (dict(self.chaos.counts)
+                             if self.chaos is not None else None),
+                "watchdog_events": (len(self.watchdog.events)
+                                    if self.watchdog is not None else 0),
+            },
             "pool": dict(self.pool.stats, pages=self.pool.n_pages,
                          in_use=self.pool.in_use, free=self.pool.free_count,
                          by_owner={str(k): v

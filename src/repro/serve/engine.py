@@ -389,7 +389,9 @@ class ContinuousBatchingEngine:
                  namespace: str = "",
                  name: str | None = None,
                  admission_hook=None,
-                 reclaim=None):
+                 reclaim=None,
+                 chaos=None,
+                 journal_horizon: int | None = None):
         from repro.core.platform import Platform, XHeepConfig
 
         if slots < 1:
@@ -406,7 +408,12 @@ class ContinuousBatchingEngine:
         self.platform = platform or Platform(XHeepConfig())
         self.queue_capacity = queue_capacity
         self.clock = clock
-        self.journal = journal or RequestJournal()
+        self.journal = journal or RequestJournal(horizon=journal_horizon)
+        # fault-injection plan (repro.serve.chaos.FaultPlan or None):
+        # consulted at the top of every device launch (may raise a
+        # retryable DeviceStepFault) and on every retired token (may
+        # corrupt the host-transferred value)
+        self.chaos = chaos
         self.pad_token = pad_token
         self.prefill_chunk = prefill_chunk
         self.async_dispatch = async_dispatch
@@ -519,6 +526,20 @@ class ContinuousBatchingEngine:
         self.completed: list[Request] = []
         self.rejected = 0
         self.shed = 0                          # queue heads dropped by the hook
+        self.token_faults = 0                  # corrupted tokens refused
+        self.replays = 0                       # quarantine-driven requeues
+        # corruption quarantine: slots whose retired token failed the
+        # vocab range check or the journal cross-check this step — their
+        # requests are evicted and replayed by _recover_faulted()
+        self._faulted: list[_Slot] = []
+        # slot identities a flush-retire must skip (their journal position
+        # is behind the in-flight step; delivering would leave a gap)
+        self._skip_retire: frozenset = frozenset()
+        self._replay_counts: dict[str, int] = {}
+        # livelock guard: a request quarantined this many times stops
+        # being "transient corruption" and raises (a real divergence bug
+        # would otherwise replay forever)
+        self.max_replays = 16
 
         if self.paged:
             self._pstep = paged_step_fn(cfg, self._window)
@@ -715,12 +736,18 @@ class ContinuousBatchingEngine:
         the launch happens before the *previous* step's host bookkeeping,
         so the device never idles on the host. Returns False when idle.
         """
+        if self._faulted:
+            # quarantine left by a preemption's pending-flush: recover
+            # before dispatch — the faulted slot's next_token is stale
+            self._recover_faulted()
         self._admit()
         if self.active == 0:
             if self._pending is not None:
                 self._retire(self._pending)        # drain the in-flight step
                 self._pending = None
                 self._prev_nxt = None
+                if self._faulted:
+                    self._recover_faulted()
                 return True
             return False
         meta, nxt = self._dispatch()
@@ -732,6 +759,8 @@ class ContinuousBatchingEngine:
                 self._retire(prev)   # host catches up while the device runs
         else:
             self._retire((meta, nxt))
+        if self._faulted:
+            self._recover_faulted()
         return True
 
     def _dispatch(self) -> tuple[_StepMeta, Any]:
@@ -814,6 +843,12 @@ class ContinuousBatchingEngine:
     def _launch(self, toks, counts, feedback, emit):
         """One batched device launch; returns the on-device next-token vec
         (sampled per lane — exact argmax for greedy lanes)."""
+        if self.chaos is not None:
+            # fault-injection point, deliberately before any buffer is
+            # donated: a DeviceStepFault here leaves device and host
+            # state exactly as they were, so the step is retryable
+            # (page allocation above is idempotent-resumable)
+            self.chaos.launch(self.name)
         chunk = self.prefill_chunk
         prev = (self._prev_nxt if self._prev_nxt is not None
                 else self._zero_prev)
@@ -856,19 +891,48 @@ class ContinuousBatchingEngine:
 
     def _retire(self, pending: tuple[_StepMeta, Any]) -> None:
         """Host-side completion of a dispatched step: transfer the argmax
-        vector and run everything that needed the token values."""
+        vector and run everything that needed the token values.
+
+        Every delivered token runs the corruption gate: the chaos hook
+        (if any) may corrupt the host-transferred value, and a token
+        failing the vocab range check or the journal's replay
+        cross-check is *never* journaled or appended — its slot joins
+        the quarantine (``_faulted``) and the request replays from the
+        journal (:meth:`_recover_faulted`). Slots in ``_skip_retire``
+        (an in-flight step flushed during quarantine recovery) are
+        skipped outright: their journal position is behind this step,
+        so delivering would corrupt the record's sequence.
+        """
         meta, nxt = pending
         vals = np.asarray(jax.device_get(nxt)).reshape(-1)
         now = self.clock()
         for i, slot in meta.emitted:
+            if id(slot) in self._skip_retire:
+                continue
             tok = int(vals[i])
+            if self.chaos is not None:
+                tok = self.chaos.deliver_token(self.name, tok)
+            ok = 0 <= tok < self.cfg.vocab
+            if ok:
+                try:
+                    self.journal.record_token(slot.request.id, tok)
+                except RuntimeError:
+                    # replay cross-check divergence: an in-range corrupt
+                    # token caught against the journaled prior run
+                    ok = False
+            if not ok:
+                self.token_faults += 1
+                self._faulted.append(slot)
+                continue
             if slot.request.first_token_time is None:
                 slot.request.first_token_time = now   # TTFT stamp (at retire:
                 # the token is host-visible only once the transfer lands)
             slot.request.tokens.append(tok)
-            self.journal.record_token(slot.request.id, tok)
             slot.next_token = tok
+        faulted_ids = {id(s) for s in self._faulted}
         for slot in meta.finished:
+            if id(slot) in self._skip_retire or id(slot) in faulted_ids:
+                continue               # quarantined: must replay, not finish
             req = slot.request
             req.finish_time = self.clock()
             self.journal.complete(req.id)
@@ -877,6 +941,55 @@ class ContinuousBatchingEngine:
             self.platform.interrupts.fire(COMPLETE_LINE, req)
             if req.on_complete is not None:
                 req.on_complete(req)
+
+    def _recover_faulted(self) -> None:
+        """Quarantine recovery: replay every corruption-faulted request.
+
+        The in-flight async step (if any) is flushed first with the
+        quarantined slots masked out — their pending token is discarded
+        (the journal stops before the corrupted position, and replay
+        regenerates everything after it), while innocent lanes retire
+        normally. Each faulted request is then evicted and requeued at
+        the front with its bookkeeping reset; re-admission reopens the
+        journal record (the pre-fault tokens become the ``prior`` run)
+        and ``record_token`` cross-checks the replay token-for-token.
+        Recovery is charged to the request's own latency: arrival time
+        is preserved, so TTFT/TPOT absorb the replay honestly.
+        """
+        while self._faulted:
+            batch, self._faulted = self._faulted, []
+            if self._pending is not None:
+                self._skip_retire = frozenset(id(s) for s in batch)
+                try:
+                    self._retire(self._pending)
+                finally:
+                    self._skip_retire = frozenset()
+                self._pending = None
+                self._prev_nxt = None
+            requeue = []
+            for slot in sorted(batch, key=lambda s: s.seq):
+                req = slot.request
+                n = self._replay_counts.get(req.id, 0) + 1
+                self._replay_counts[req.id] = n
+                if n > self.max_replays:
+                    raise RuntimeError(
+                        f"request {req.id!r} quarantined {n} times — "
+                        "persistent divergence, not transient corruption")
+                for i, s in enumerate(self.slots):
+                    if s is slot:
+                        self._evict(i)
+                        break
+                # a host-known-finished slot was already evicted at
+                # dispatch; a preemption racing the quarantine may have
+                # requeued the request itself — never queue it twice
+                if any(r is req for r in self.queue):
+                    continue
+                req.tokens = []
+                req.admit_time = None
+                req.first_token_time = req.finish_time = None
+                requeue.append(req)
+                self.replays += 1
+            self.queue.extendleft(reversed(requeue))
 
     # -- paged-backend plumbing ----------------------------------------------
 
@@ -1175,6 +1288,7 @@ class ContinuousBatchingEngine:
         for req in done:
             self.journal.evict(req.id)
             self._ids.discard(req.id)
+            self._replay_counts.pop(req.id, None)
         return done
 
     def occupancy(self) -> dict:
@@ -1233,8 +1347,11 @@ class ContinuousBatchingEngine:
             "sampled_requests": self.sampled_requests,
             "rejected": self.rejected,
             "shed": self.shed,
+            "token_faults": self.token_faults,
+            "replays": self.replays,
             "queued": len(self.queue),
             "active": self.active,
+            "journal": self.journal.size(),
         }
         if self.pages is not None:
             out["pages"] = dict(self.pages.stats,

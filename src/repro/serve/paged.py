@@ -109,6 +109,11 @@ class PagePool:
         self._owner: dict[int, str | None] = {}
         self._by_owner: dict[str | None, int] = {}
         self.stats = {"allocated": 0, "freed": 0, "high_water": 0}
+        # fault-injection hook (chaos harness): called with the owner tag
+        # at the top of every alloc, before the free list is touched — it
+        # may raise (repro.serve.chaos.AllocFault) to model a transient
+        # allocation failure. None = off.
+        self.fault_hook = None
 
     def arena(self, cfg: ModelConfig) -> PoolArena:
         """Device arena for ``cfg``'s cache signature (created on first
@@ -128,7 +133,12 @@ class PagePool:
 
     def alloc(self, owner: str | None = None) -> int:
         """Take a free page (one reference held by the caller). ``owner``
-        tags the page for per-tenant accounting until it is recycled."""
+        tags the page for per-tenant accounting until it is recycled.
+        With a ``fault_hook`` installed (chaos harness) the hook runs
+        first and may raise — the pool is untouched in that case, so the
+        caller's allocation loop is safely retryable."""
+        if self.fault_hook is not None:
+            self.fault_hook(owner)
         if not self._free:
             raise RuntimeError(
                 f"page pool exhausted ({self.n_pages} pages, all referenced)")

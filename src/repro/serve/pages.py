@@ -133,6 +133,11 @@ class PageTable:
         # concurrent cold prefills across engines: the later slot stalls
         # on the earlier engine's claim and adopts the published page.
         self._claims: dict[tuple[str, tuple], Any] = {}
+        # fault-injection hook (chaos harness): called with the namespace
+        # at the top of every acquire; returning True suppresses the
+        # match (a spurious cold prefill). Sharing is an optimisation
+        # only, so a dropped match degrades throughput, never tokens.
+        self.fault_hook = None
         self._tick = 0
         self._next_bank = 0
         self.stats = {
@@ -176,7 +181,12 @@ class PageTable:
 
         Every page of the chain is individually refcounted; the caller must
         hand the returned ``keys`` back to :meth:`release` exactly once
-        (on completion, eviction, or preemption)."""
+        (on completion, eviction, or preemption). With a ``fault_hook``
+        installed (chaos harness) a hook hit turns this acquire into a
+        miss — the caller cold-prefills as if nothing were resident."""
+        if self.fault_hook is not None and self.fault_hook(ns):
+            self.stats["misses"] += 1
+            return None
         keys = self._chain_keys(prompt, ns)
         if not keys:
             self.stats["misses"] += 1

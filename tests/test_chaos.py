@@ -1,0 +1,420 @@
+"""Chaos-tolerant serving: deterministic fault injection + crash recovery.
+
+The invariant every test here holds the stack to: under *any* injected
+fault schedule — device-step failures, corrupted tokens, NaN logits,
+allocation failures, engine crashes, bank power-faults, prefix-match
+drops — every completed request's tokens are bit-identical to the
+fault-free run, no request is lost, and none completes twice. Two
+same-seed chaos runs must inject the identical schedule and produce
+bit-identical everything (tokens, fault counters, watchdog events).
+"""
+
+import dataclasses
+
+import pytest
+
+from engine_sim import (CANONICAL, ClusterSimulator, Simulator,
+                        add_smoke_engine, make_cluster, make_engine,
+                        make_requests, shared_prefix_reqs, smoke_params,
+                        staggered_trace, tag_engine, tokens_of)
+from repro.runtime.ft import FTConfig
+from repro.serve.chaos import DeviceStepFault, FaultPlan, FaultSpec
+from repro.serve.cluster import BANK_FAULT_LINE, CRASH_LINE, SchedPolicy
+from repro.serve.engine import Request
+from repro.serve.metrics import SLO
+from repro.serve.sampling import SamplingParams
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_validates_probabilities():
+    with pytest.raises(ValueError, match="probability"):
+        FaultSpec(step_fail=1.5)
+    with pytest.raises(ValueError, match="probability"):
+        FaultSpec(engine_crash=-0.1)
+
+
+def test_fault_plan_streams_are_seeded_and_scoped():
+    """Same seed => identical draw sequence per (kind, scope); distinct
+    scopes draw from independent streams (adding an engine never perturbs
+    a neighbour's schedule)."""
+    spec = FaultSpec(step_fail=0.5, engine_crash=0.5)
+    a, b = FaultPlan(11, spec), FaultPlan(11, spec)
+    seq_a = [a.crash("e0") for _ in range(50)]
+    seq_b = [b.crash("e0") for _ in range(50)]
+    assert seq_a == seq_b
+    assert a.counts == b.counts
+    # a second scope's stream is independent of how much e0 consumed
+    c = FaultPlan(11, spec)
+    seq_c = [c.crash("e1") for _ in range(50)]
+    assert [b.crash("e1") for _ in range(50)] == seq_c
+
+
+def test_fault_plan_budget_caps_without_perturbing_streams():
+    spec = FaultSpec(step_fail=1.0)
+    capped = FaultPlan(0, spec, budget={"step_fail": 2})
+    fired = 0
+    for _ in range(10):
+        try:
+            capped.launch("e")
+        except DeviceStepFault:
+            fired += 1
+    assert fired == 2 and capped.counts["step_fail"] == 2
+
+
+def test_zero_probability_never_draws():
+    plan = FaultPlan(0, FaultSpec())
+    plan.launch("e")                       # no raise
+    plan.alloc("e")
+    assert plan.deliver_token("e", 7) == 7
+    assert not plan.crash("e") and not plan.bank("e")
+    assert not plan.drop_prefix("ns")
+    assert plan._rngs == {}                # p == 0 never builds a stream
+
+
+# ---------------------------------------------------------------------------
+# The tentpole invariant, per fault kind and all at once
+# ---------------------------------------------------------------------------
+
+
+def _drive(chaos=None, n=8, **cluster_kwargs):
+    cluster, clock = make_cluster(pool_pages=48, page_size=8, chaos=chaos,
+                                  **cluster_kwargs)
+    add_smoke_engine(cluster, name="e0", slots=2, max_len=40,
+                     prefill_chunk=2, page_size=8, async_dispatch=True)
+    reqs = make_requests(n, prompt_len=5, new_tokens=4)
+    trace = list(tag_engine(staggered_trace(reqs, gap=1.0), "e0"))
+    rep = ClusterSimulator(cluster, trace, clock).run()
+    return cluster, rep
+
+
+@pytest.fixture(scope="module")
+def fault_free_tokens():
+    cluster, _ = _drive()
+    return tokens_of(cluster.engines["e0"])
+
+
+@pytest.mark.parametrize("kind,p", [
+    ("step_fail", 0.15), ("token_corrupt", 0.1), ("nan_logits", 0.1),
+    ("alloc_fail", 0.35), ("engine_crash", 0.05), ("bank_fault", 0.08),
+    ("prefix_drop", 0.3),
+])
+def test_each_fault_kind_keeps_outputs_bit_identical(kind, p,
+                                                     fault_free_tokens):
+    plan = FaultPlan(7, FaultSpec(**{kind: p}))
+    cluster, _ = _drive(chaos=plan)
+    assert plan.counts[kind] > 0, "the fault under test never fired"
+    assert tokens_of(cluster.engines["e0"]) == fault_free_tokens
+    faults = cluster.stats()["faults"]
+    assert faults["injected"] == plan.counts
+    if kind == "step_fail":
+        assert faults["step_faults"] == plan.counts[kind]
+        assert faults["retries"] > 0
+    if kind == "alloc_fail":
+        assert faults["alloc_faults"] == plan.counts[kind]
+    if kind in ("token_corrupt", "nan_logits"):
+        assert faults["token_faults"] == plan.counts[kind]
+        assert faults["replays"] > 0
+    if kind == "engine_crash":
+        assert faults["crashes"] == faults["rebuilds"] == plan.counts[kind]
+        ints = cluster.platform.interrupts
+        assert ints.count(CRASH_LINE) == plan.counts[kind]
+    if kind == "bank_fault":
+        ints = cluster.platform.interrupts
+        assert ints.count(BANK_FAULT_LINE) == faults["bank_faults"] > 0
+
+
+def test_fault_storm_no_lost_no_double_completed(fault_free_tokens):
+    """Every kind at once: outputs still bit-identical, every submitted
+    request accounted exactly once."""
+    plan = FaultPlan(3, FaultSpec(step_fail=0.05, token_corrupt=0.05,
+                                  nan_logits=0.03, alloc_fail=0.05,
+                                  engine_crash=0.02, bank_fault=0.04,
+                                  prefix_drop=0.2))
+    cluster, _ = _drive(chaos=plan)
+    eng = cluster.engines["e0"]
+    assert tokens_of(eng) == fault_free_tokens
+    done_ids = [r.id for r in eng.completed]
+    assert len(done_ids) == len(set(done_ids)) == 8   # none lost or doubled
+    assert not eng.queue and eng.active == 0
+    assert sum(plan.counts.values()) > 0
+
+
+def test_same_seed_chaos_runs_are_bit_identical():
+    """Satellite: chaos determinism end to end — two same-seed runs agree
+    on the injected schedule, every token, every fault counter, and the
+    watchdog's event log (the FTController rides the same injectable
+    clock)."""
+    spec = FaultSpec(step_fail=0.05, token_corrupt=0.05, engine_crash=0.02,
+                     bank_fault=0.04)
+
+    def once():
+        cluster, _ = _drive(chaos=FaultPlan(3, spec))
+        return (tokens_of(cluster.engines["e0"]), cluster.stats()["faults"],
+                [msg for _, msg in cluster.watchdog.events])
+
+    tok1, faults1, events1 = once()
+    tok2, faults2, events2 = once()
+    assert tok1 == tok2
+    assert faults1 == faults2
+    assert events1 == events2 and len(events1) > 0
+
+
+def test_persistent_corruption_raises_instead_of_livelocking():
+    """A token corrupted on *every* delivery is not transient — the
+    replay-count guard must fail loudly instead of replaying forever."""
+    plan = FaultPlan(0, FaultSpec(token_corrupt=1.0))
+    eng, clock = make_engine(slots=1, max_len=16, chaos=plan)
+    eng.submit(Request(id="r", prompt=[1, 2], max_new_tokens=2))
+    with pytest.raises(RuntimeError, match="quarantined"):
+        eng.run_until_idle()
+
+
+def test_transient_fault_streak_past_budget_raises():
+    """An engine whose launches fail every retry exhausts the cluster's
+    transient-fault budget and raises rather than spinning silently."""
+    plan = FaultPlan(0, FaultSpec(step_fail=1.0))
+    cluster, clock = make_cluster(pool_pages=48, page_size=8, chaos=plan,
+                                  max_fault_streak=3)
+    add_smoke_engine(cluster, name="e0", slots=1, max_len=40)
+    cluster.submit("e0", Request(id="r", prompt=[1, 2], max_new_tokens=2))
+    with pytest.raises(RuntimeError, match="consecutive step faults"):
+        cluster.run_until_idle()
+
+
+# ---------------------------------------------------------------------------
+# Engine-level corruption quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_corrupted_token_never_journaled_then_replays():
+    """The corruption gate: a bit-flipped token is refused before the
+    journal sees it; the quarantined request replays bit-identically."""
+    base, clock0 = make_engine(slots=2, max_len=16)
+    reqs = lambda: make_requests(4, prompt_len=3, new_tokens=4)
+    Simulator(base, staggered_trace(reqs(), gap=1.0), clock0).run()
+
+    plan = FaultPlan(0, FaultSpec(token_corrupt=0.2))
+    eng, clock = make_engine(slots=2, max_len=16, chaos=plan,
+                             async_dispatch=True)
+    Simulator(eng, staggered_trace(reqs(), gap=1.0), clock).run()
+    assert plan.counts["token_corrupt"] > 0
+    assert eng.token_faults == plan.counts["token_corrupt"]
+    assert eng.replays > 0
+    assert tokens_of(eng) == tokens_of(base)
+    for rec in eng.journal.completed():
+        vocab = eng.cfg.vocab
+        assert all(0 <= t < vocab for t in rec.generated)
+
+
+# ---------------------------------------------------------------------------
+# Crash recovery (the satellite scenario) and watchdog escalation
+# ---------------------------------------------------------------------------
+
+
+def _swa_cfg_params():
+    cfg0, params = smoke_params("granite_3_2b")
+    cfg = dataclasses.replace(cfg0, name=f"{cfg0.name}-swa8",
+                              sliding_window=8)
+    return cfg, params
+
+
+SAMPLED = SamplingParams(temperature=0.9, top_k=20, top_p=0.9, seed=5)
+
+
+def _crash_workload():
+    """Shared-prefix greedy + sampled requests for engine 'g', long
+    past-the-window requests for the windowed engine 'w'."""
+    g = shared_prefix_reqs("s", 3, prefix_len=16, tail_len=3, new_tokens=5)
+    g += [Request(id=f"x{i}",
+                  prompt=[(5 * i + j) % 200 + 1 for j in range(4)],
+                  max_new_tokens=6, sampling=dataclasses.replace(SAMPLED))
+          for i in range(3)]
+    w = [Request(id=f"w{i}",
+                 prompt=[(3 * i + j) % 150 + 1 for j in range(12)],
+                 max_new_tokens=16)
+         for i in range(2)]
+    return g, w
+
+
+def _crash_cluster():
+    cluster, clock = make_cluster(pool_pages=64, page_size=8)
+    add_smoke_engine(cluster, name="g", namespace="granite", slots=2,
+                     max_len=40, prefill_chunk=2, page_size=8,
+                     async_dispatch=True)
+    swa_cfg, swa_params = _swa_cfg_params()
+    cluster.add_engine(swa_cfg, swa_params, name="w", namespace="swa",
+                       slots=2, max_len=40,
+                       lane_batch=CANONICAL["lane_batch"],
+                       device_len=CANONICAL["device_len"])
+    g, w = _crash_workload()
+    trace = list(tag_engine(staggered_trace(g, gap=1.0), "g"))
+    trace += list(tag_engine(staggered_trace(w, gap=1.0), "w"))
+    trace.sort(key=lambda a: a.time)
+    return cluster, clock, trace
+
+
+def test_cluster_journal_crash_restore_bit_identical_and_reconciled():
+    """Kill an engine with in-flight sampled + windowed + shared-prefix
+    requests; the journal rebuild must complete every request with the
+    fault-free tokens and leave the shared pool's refcounts fully
+    reconciled (no leaked, no double-freed pages)."""
+    base, bclock, btrace = _crash_cluster()
+    ClusterSimulator(base, btrace, bclock).run()
+    want = {n: tokens_of(e) for n, e in base.engines.items()}
+    assert len(want["g"]) == 6 and len(want["w"]) == 2
+
+    cluster, clock, trace = _crash_cluster()
+    sim = ClusterSimulator(cluster, trace, clock)
+    for _ in range(12):                    # run partway: work is in flight
+        sim._deliver_due()
+        if cluster.busy:
+            cluster.step()
+        clock.advance(1.0)
+    assert cluster.engines["g"].active > 0
+    assert cluster.engines["w"].active > 0
+    cluster.crash_engine("g")
+    cluster.crash_engine("w")
+    assert cluster.crashes == cluster.rebuilds == 2
+    assert cluster.platform.interrupts.count(CRASH_LINE) == 2
+    sim.run()                              # drain the rest
+
+    got = {n: tokens_of(e) for n, e in cluster.engines.items()}
+    assert got == want
+    # the windowed tenant really exercised its ring (counter spans rebuild)
+    assert cluster.engines["w"].pages_recycled > 0
+    for eng in cluster.engines.values():
+        ids = [r.id for r in eng.completed]
+        assert len(ids) == len(set(ids))   # no double completion
+    # refcount reconciliation: after the drain the only live references
+    # are the table's residency; dropping it must empty the pool exactly
+    assert cluster.pool.in_use == cluster.table.resident
+    cluster.table.clear()
+    assert cluster.pool.in_use == 0
+
+
+def test_crash_with_delayed_rebuild_restarts_via_step_loop():
+    """crash_engine(rebuild=False) leaves the tenant down; the cluster
+    step loop waits out the watchdog's restart delay, rebuilds, and the
+    drained outputs still match the fault-free run."""
+    base, bclock, btrace = _crash_cluster()
+    ClusterSimulator(base, btrace, bclock).run()
+    want = {n: tokens_of(e) for n, e in base.engines.items()}
+
+    cluster, clock, trace = _crash_cluster()
+    sim = ClusterSimulator(cluster, trace, clock)
+    for _ in range(10):
+        sim._deliver_due()
+        if cluster.busy:
+            cluster.step()
+        clock.advance(1.0)
+    assert cluster.engines["g"].busy
+    cluster.crash_engine("g", rebuild=False)
+    assert "g" in cluster.stats()["faults"]["down"]
+    assert cluster.busy                    # journaled work still owed
+    sim.run()
+    assert cluster.rebuilds == 1
+    assert {n: tokens_of(e) for n, e in cluster.engines.items()} == want
+
+
+def test_watchdog_heartbeat_timeout_escalates_to_crash():
+    """A tenant that stops heartbeating (stuck in a long backoff while
+    the clock advances) is declared dead by the watchdog and recovered
+    through the same crash-rebuild path — and its outputs still match."""
+    base, _ = _drive(n=4)
+    want = tokens_of(base.engines["e0"])
+
+    cluster, clock = make_cluster(
+        pool_pages=48, page_size=8,
+        watchdog=FTConfig(heartbeat_timeout_s=3.0, backoff_base_s=1.0))
+    add_smoke_engine(cluster, name="e0", slots=2, max_len=40,
+                     prefill_chunk=2, page_size=8, async_dispatch=True)
+    reqs = make_requests(4, prompt_len=5, new_tokens=4)
+    trace = list(tag_engine(staggered_trace(reqs, gap=1.0), "e0"))
+    sim = ClusterSimulator(cluster, trace, clock)
+    for _ in range(4):
+        sim._deliver_due()
+        cluster.step()
+        clock.advance(1.0)
+    assert cluster.engines["e0"].busy
+    # wedge the engine: a manual backoff starves its heartbeat while the
+    # driver keeps stepping and the clock keeps moving
+    cluster._backoff["e0"] = 100
+    dead_before = cluster.crashes
+    for _ in range(6):
+        sim._deliver_due()
+        cluster.step()
+        clock.advance(1.0)
+    assert cluster.crashes == dead_before + 1
+    assert any("heartbeat timeout" in msg
+               for _, msg in cluster.watchdog.events)
+    sim.run()
+    assert tokens_of(cluster.engines["e0"]) == want
+
+
+def test_degraded_engine_sheds_blown_heads_without_policy():
+    """Graceful degradation: past ``degrade_streak`` consecutive faults,
+    an engine sheds SLO-blown queue heads even under the default policy
+    (recovery already charged their TTFT; serving them wastes post-fault
+    capacity). Fresh, in-budget heads still admit."""
+    cluster, clock = make_cluster(pool_pages=48, page_size=8,
+                                  watchdog=FTConfig(), degrade_streak=3)
+    add_smoke_engine(cluster, name="e0", slots=1, max_len=40)
+    blown = Request(id="late", prompt=[1, 2, 3], max_new_tokens=2,
+                    slo=SLO(ttft=2.0, tpot=None))
+    blown.arrival_time = 0.0
+    clock.t = 10.0                         # TTFT long gone
+    cluster.submit("e0", blown)
+    cluster._fault_streak["e0"] = 3        # sustained-fault regime
+    cluster.step()
+    assert cluster.sheds == 1
+    assert cluster.engines["e0"].shed == 1
+    assert not cluster.engines["e0"].queue
+
+
+def test_replayed_request_exempt_from_shedding():
+    """A head holding journal state (here: crash-recovered) must finish,
+    not shed — shedding it would orphan an in-flight journal record that
+    the next rebuild resurrects (double accounting)."""
+    cluster, clock = make_cluster(
+        pool_pages=48, page_size=8, watchdog=FTConfig(),
+        policy=SchedPolicy(shed_busted=True))
+    eng = add_smoke_engine(cluster, name="e0", slots=1, max_len=40)
+    req = Request(id="r", prompt=[1, 2, 3], max_new_tokens=4,
+                  slo=SLO(ttft=2.0, tpot=None))
+    cluster.submit("e0", req)
+    cluster.step()                         # admitted: journal record opened
+    assert eng.journal.has("r")
+    cluster.crash_engine("e0")
+    clock.t = 50.0                         # far past the TTFT target
+    cluster.run_until_idle()
+    eng = cluster.engines["e0"]
+    assert cluster.sheds == 0 and eng.shed == 0
+    assert [r.id for r in eng.completed] == ["r"]
+
+
+def test_bank_fault_requeues_fifo_and_gates_bank():
+    """A bank power-fault preempts every slot on the faulted bank in FIFO
+    order and fires the XAIF line; outputs are unchanged (covered by the
+    parametrized kind test — here the mechanics)."""
+    cluster, clock = make_cluster(pool_pages=48, page_size=8)
+    eng = add_smoke_engine(cluster, name="e0", slots=2, max_len=40)
+    for r in make_requests(2, prompt_len=3, new_tokens=4):
+        cluster.submit("e0", r)
+    cluster.step()                         # admit both onto their banks
+    assert eng.active == 2
+    banks = {eng._slot_bank[i] for i, s in enumerate(eng.slots)
+             if s is not None}
+    cluster._apply_bank_fault("e0")
+    assert cluster.bank_faults == 1
+    assert cluster.platform.interrupts.count(BANK_FAULT_LINE) == 1
+    if len(banks) == 1:                    # both slots shared the bank
+        assert [r.id for r in eng.queue] == ["r0", "r1"]   # FIFO restored
+    else:
+        assert [r.id for r in eng.queue] == ["r0"]
+    cluster.run_until_idle()
+    ids = [r.id for r in eng.completed]
+    assert sorted(ids) == ["r0", "r1"] and len(set(ids)) == 2

@@ -95,3 +95,79 @@ print("ELASTIC_OK")
 """
     out = subproc(code, devices=8)
     assert "ELASTIC_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Partial-write / corruption detection (the engine-rebuild restore path)
+# ---------------------------------------------------------------------------
+
+
+def _leaf_file(tmp_path, step, name):
+    return tmp_path / f"step_{step:09d}" / f"{name}.npy"
+
+
+def test_truncated_leaf_detected(tmp_path):
+    t = tree()
+    checkpoint.save(tmp_path, t, step=1)
+    f = _leaf_file(tmp_path, 1, "a")
+    f.write_bytes(f.read_bytes()[:-40])    # torn write: tail lost
+    with pytest.raises(ValueError, match="corrupt"):
+        checkpoint.restore(tmp_path, t)
+
+
+def test_flipped_bytes_detected_by_crc(tmp_path):
+    t = tree()
+    checkpoint.save(tmp_path, t, step=1)
+    f = _leaf_file(tmp_path, 1, "nested__c")
+    raw = bytearray(f.read_bytes())
+    raw[-1] ^= 0xFF                        # same size/shape, wrong bits
+    f.write_bytes(bytes(raw))
+    with pytest.raises(ValueError, match="CRC mismatch"):
+        checkpoint.restore(tmp_path, t)
+
+
+def test_missing_leaf_file_detected(tmp_path):
+    t = tree()
+    checkpoint.save(tmp_path, t, step=1)
+    _leaf_file(tmp_path, 1, "nested__b").unlink()
+    with pytest.raises(ValueError, match="partial write"):
+        checkpoint.restore(tmp_path, t)
+
+
+def test_manifest_backcompat_without_integrity_fields(tmp_path):
+    """Checkpoints written before nbytes/crc32 existed still restore —
+    the integrity checks are keyed on field presence, shape always runs."""
+    t = tree()
+    checkpoint.save(tmp_path, t, step=1)
+    mf = tmp_path / "step_000000001" / "manifest.json"
+    manifest = json.loads(mf.read_text())
+    for ent in manifest["leaves"]:
+        del ent["nbytes"], ent["crc32"]
+    mf.write_text(json.dumps(manifest))
+    got, step, _ = checkpoint.restore(tmp_path, t)
+    assert step == 1
+    assert_tree_equal(t, got)
+    # shape verification is unconditional even without the new fields
+    bad = np.zeros((9, 9), np.float32)
+    np.save(_leaf_file(tmp_path, 1, "a"), bad)
+    with pytest.raises(ValueError, match="shape"):
+        checkpoint.restore(tmp_path, t)
+
+
+def test_overwrite_same_step_is_atomic(tmp_path):
+    """Re-saving a step swaps via rename-aside: the second tree restores,
+    and no .old_* scaffolding survives the swap."""
+    t1, t2 = tree(seed=0), tree(seed=1)
+    checkpoint.save(tmp_path, t1, step=4)
+    checkpoint.save(tmp_path, t2, step=4)
+    got, step, _ = checkpoint.restore(tmp_path, t1)
+    assert step == 4
+    assert_tree_equal(t2, got)
+    assert not list(tmp_path.glob(".old_step_*"))
+    assert not list(tmp_path.glob(".tmp_step_*"))
+    # a stale rename-aside from a crashed earlier swap is cleaned up too
+    (tmp_path / ".old_step_000000004").mkdir()
+    checkpoint.save(tmp_path, t1, step=4)
+    assert not list(tmp_path.glob(".old_step_*"))
+    got, _, _ = checkpoint.restore(tmp_path, t1)
+    assert_tree_equal(t1, got)

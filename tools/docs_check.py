@@ -52,9 +52,9 @@ _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _EXTERNAL = ("http://", "https://", "mailto:")
 
 DOC_MODULES = (
-    "repro.serve.cluster", "repro.serve.engine", "repro.serve.loadgen",
-    "repro.serve.metrics", "repro.serve.paged", "repro.serve.pages",
-    "repro.serve.sampling", "repro.serve.sim",
+    "repro.serve.chaos", "repro.serve.cluster", "repro.serve.engine",
+    "repro.serve.loadgen", "repro.serve.metrics", "repro.serve.paged",
+    "repro.serve.pages", "repro.serve.sampling", "repro.serve.sim",
     "repro.kernels.paged_attention.kernel",
     "repro.kernels.paged_attention.ops",
     "repro.kernels.paged_attention.ref",
