@@ -7,6 +7,8 @@
 #   make sim-smoke    fast open-loop smoke: seeded 1k-request trace, < 10 s
 #   make chaos-smoke  fast fault-injection smoke: seeded 1k-request trace
 #                     under a nonzero fault rate, bit-identity asserted, < 10 s
+#   make tp-smoke     fast sharding smoke: seeded 1k-request trace on 2 forced
+#                     host devices, tp=2 asserted bit-identical to 1 device, < 15 s
 #   make docs-check   intra-repo links in README/docs + serve/* docstrings
 #
 # bench-serve forwards extra flags given after `--` (and anything in
@@ -21,7 +23,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 BENCH_PASSTHRU = $(filter-out bench-serve,$(MAKECMDGOALS))
 
 .PHONY: test-fast test-all bench-serve bench-json bench-table docs-check \
-	sim-smoke chaos-smoke
+	sim-smoke chaos-smoke tp-smoke
 
 # Fast tier compiles at XLA opt level 0: the suite is compile-bound (tiny
 # smoke models, hundreds of small programs) and every correctness assertion
@@ -60,6 +62,9 @@ bench-json:
 		--open-loop-rate 40 --sampling --json --bench-json
 	$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
 		--open-loop-rate 40 --chaos --json --bench-json
+	XLA_FLAGS="--xla_force_host_platform_device_count=4 $$XLA_FLAGS" \
+		$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
+		--tp 2 --tp-requests 600 --json --bench-json
 
 # fast-tier open-loop smoke: a seeded 1k-request trace through the full
 # SLO-aware pipeline (loadgen -> cluster -> metrics), < 10 s on CPU
@@ -77,6 +82,18 @@ chaos-smoke:
 		$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
 		--chaos 1000 --chaos-skip-twin --json > /dev/null
 	@echo "chaos-smoke: 1k-request faulted trace bit-identical OK"
+
+# fast-tier sharding smoke: the same seeded 1k-request open-loop trace
+# decoded once on 1 device and once head-sharded over tp=2 forced host
+# devices — tokens asserted bit-identical, arenas asserted split (per-device
+# bytes sum to the single-device footprint). Replica drive is skipped: it
+# needs 4 devices and belongs to `make bench-json`.
+tp-smoke:
+	XLA_FLAGS="--xla_backend_optimization_level=0 \
+		--xla_force_host_platform_device_count=2 $$XLA_FLAGS" \
+		$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
+		--tp 2 --tp-requests 1000 --tp-skip-replicas --json > /dev/null
+	@echo "tp-smoke: 1k-request tp=2 trace bit-identical, arenas split OK"
 
 # regenerate the README benchmark table from the committed BENCH_serve.json
 # (docs-check fails when the two drift, so PRs stop hand-editing numbers)

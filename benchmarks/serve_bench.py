@@ -24,6 +24,13 @@ overlaps them (see :class:`repro.serve.sim.Simulator`). Modes:
   page_size)``), the pool pages provisioned, and pages recycled.
 * ``--kernel-bench`` — microbenchmark of the fused paged-attention Pallas
   kernel (interpret mode on CPU) against its pure-jax reference.
+* ``--tp [N]`` — mesh-sharded serving: single device vs N-way
+  tensor-parallel paged decode (pool arenas and attention heads sharded
+  over a ``("model",)`` mesh under ``shard_map``) vs a 2-replica group of
+  N-way members on disjoint device slices. Bit-identity is asserted
+  across all three, and the report shows the arenas *split* (1/N of the
+  single-device bytes per device), not duplicated. Needs forced host
+  devices: ``XLA_FLAGS=--xla_force_host_platform_device_count=2N``.
 * ``--open-loop [N]`` — N lazily generated open-loop arrivals (seeded
   bursty/Poisson/diurnal process, default 10⁵) at an offered load far
   above cluster capacity: SLO-aware scheduling (DRR over ``step_cost`` +
@@ -1003,6 +1010,172 @@ def run_chaos(args) -> tuple[dict, float]:
     return out, goodput_retention
 
 
+def run_tp(args) -> tuple[dict, float]:
+    """Mesh-sharded serving: single device vs tensor-parallel vs replicas.
+
+    Three drives over one materialised open-loop arrival sequence (a
+    shared-prefix greedy tenant plus a seeded sampled tenant):
+
+    * ``single`` — one engine, no mesh (the PR 8 serving path);
+    * ``tp`` — the same engine on a ``--tp``-device ``("model",)`` mesh:
+      pool arenas and attention projections shard over the KV-head axis
+      under ``shard_map``, and the decode all-gathers exactly once per
+      step, before the output projection (``repro.serve.paged``);
+    * ``replicas`` — a ``ServeCluster.add_replica_group`` of two
+      tp-sharded members on disjoint device slices behind one group name,
+      routed with prefix affinity (skipped by ``--tp-skip-replicas``).
+
+    Every drive must produce bit-identical tokens per request — sharding
+    and replication are memory/latency moves, never numerical ones. The
+    report pairs aggregate tokens/s with the structural proof that the
+    tp arenas *split* rather than duplicate: per-device arena bytes sum
+    to the single-device footprint, ``1/tp`` of it on each device.
+    """
+    from repro.launch.mesh import replica_meshes, serve_tp_mesh
+    from repro.serve.cluster import ServeCluster
+    from repro.serve.loadgen import TenantSpec, open_loop_trace
+    from repro.serve.sampling import SamplingParams
+    from repro.serve.sim import Arrival, ClusterSimulator
+
+    tp, n, rate = args.tp, args.tp_requests, args.open_loop_rate
+    replicas = 0 if args.tp_skip_replicas else 2
+    need = max(tp, replicas * tp)
+    if len(jax.devices()) < need:
+        raise SystemExit(
+            f"--tp {tp} needs {need} devices, have {len(jax.devices())} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need} (see `make tp-smoke`)")
+    cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    params = P.init_tree(registry.decls(cfg), jax.random.key(args.seed))
+
+    tenants = [
+        TenantSpec(engine="pool", share=1.0, prompt_len=(6, 18),
+                   new_tokens=(4, 10), prefix_len=8, prefix_seed=7),
+        TenantSpec(engine="pool", share=0.5, prompt_len=(4, 12),
+                   new_tokens=(4, 10),
+                   sampling=SamplingParams(temperature=0.8, top_k=40)),
+    ]
+    max_len, ps = 32, 8
+    base = [(a.time, a.request.id, tuple(a.request.prompt),
+             a.request.max_new_tokens, a.request.sampling)
+            for a in open_loop_trace(tenants, n_requests=n, rate=rate,
+                                     seed=args.seed,
+                                     process=args.open_loop_process)]
+
+    def arrivals(engine=None):
+        # fresh Request objects per drive: engines mutate their requests
+        return (Arrival(t, Request(id=rid, prompt=list(p), max_new_tokens=m,
+                                   sampling=sp), engine)
+                for t, rid, p, m, sp in base)
+
+    def drive_engine(mesh, tag, devices):
+        clock = FakeClock()
+        eng = ContinuousBatchingEngine(cfg, params, slots=args.slots,
+                                       max_len=max_len, clock=clock,
+                                       prefill_chunk=args.prefill_chunk,
+                                       page_size=ps, mesh=mesh,
+                                       queue_capacity=args.queue_capacity)
+        sim = Simulator(eng, arrivals(), clock, step_time=args.step_time,
+                        dispatch_time=args.dispatch_time)
+        w0 = time.perf_counter()
+        report = sim.run(max_steps=5_000_000)
+        wall = time.perf_counter() - w0
+        by_dev = eng._pool.bytes_by_device()
+        return {"mode": tag, "devices": devices,
+                "tokens": report.tokens_generated,
+                "served": len(report.completed),
+                "elapsed_sim": report.elapsed,
+                "throughput_tok_per_sim_s": round(report.throughput, 4),
+                "wall_s": round(wall, 3),
+                "arena_bytes_by_device": by_dev}, _tokens(eng)
+
+    single, tok_single = drive_engine(None, "single", 1)
+    sharded, tok_tp = drive_engine(serve_tp_mesh(tp), f"tp{tp}", tp)
+    if tok_tp != tok_single:
+        raise AssertionError(
+            "tensor-parallel decode diverged from single-device — the "
+            "head-sharded step must be bit-identical")
+    bytes_single = sum(single["arena_bytes_by_device"].values())
+    by_dev = sharded["arena_bytes_by_device"]
+    if len(by_dev) != tp or len(set(by_dev.values())) != 1:
+        raise AssertionError(f"tp arena not evenly sharded: {by_dev}")
+    if sum(by_dev.values()) != bytes_single:
+        raise AssertionError(
+            f"tp arenas duplicated instead of split: {sum(by_dev.values())} "
+            f"bytes across {tp} devices vs {bytes_single} on one")
+
+    out = {"arch": cfg.name, "tp": tp, "replicas": replicas, "requests": n,
+           "rate": rate, "process": args.open_loop_process,
+           "slots": args.slots, "max_len": max_len, "page_size": ps,
+           "prefill_chunk": args.prefill_chunk,
+           "dispatch_time": args.dispatch_time, "step_time": args.step_time,
+           "single": single, "tp_sharded": sharded,
+           "arena_bytes_single": bytes_single,
+           "arena_bytes_per_device_tp": next(iter(by_dev.values())),
+           "bit_identical": True}
+    speedup = 1.0
+    if replicas:
+        clock = FakeClock()
+        np_slot = -(-max_len // ps)
+        cluster = ServeCluster(
+            pool_pages=replicas * args.slots * np_slot + 16, page_size=ps,
+            clock=clock)
+        members = cluster.add_replica_group(
+            cfg, params, name="pool", slots=args.slots, max_len=max_len,
+            meshes=replica_meshes(replicas, tp),
+            prefill_chunk=args.prefill_chunk,
+            queue_capacity=args.queue_capacity)
+        sim = ClusterSimulator(cluster, arrivals("pool"), clock,
+                               step_time=args.step_time,
+                               dispatch_time=args.dispatch_time)
+        w0 = time.perf_counter()
+        rep = sim.run(max_steps=5_000_000)
+        wall = time.perf_counter() - w0
+        tok_rep, per_member = {}, {}
+        for m in members:
+            tok_rep.update(_tokens(cluster.engines[m]))
+            per_member[m] = len(cluster.engines[m].completed)
+        # under queue_capacity overload two replica queues reject a
+        # different subset than one single-engine queue, so compare the
+        # requests both drives actually served — those must match exactly
+        common = set(tok_rep) & set(tok_single)
+        if not common:
+            raise AssertionError("replica group served nothing in common "
+                                 "with the single-device drive")
+        if any(tok_rep[k] != tok_single[k] for k in common):
+            raise AssertionError(
+                "replica-group serving diverged from single-device — "
+                "routing must never change a request's tokens")
+        if not all(per_member.values()):
+            raise AssertionError(f"router starved a replica: {per_member}")
+        speedup = rep.throughput / single["throughput_tok_per_sim_s"]
+        out["replica_group"] = {
+            "mode": f"{replicas}x tp{tp}", "devices": replicas * tp,
+            "members": per_member,
+            "tokens": rep.tokens_generated,
+            "served": sum(per_member.values()),
+            "elapsed_sim": rep.elapsed, "rounds": rep.steps,
+            "throughput_tok_per_sim_s": round(rep.throughput, 4),
+            "wall_s": round(wall, 3),
+            "arena_bytes_by_device": cluster.pool.bytes_by_device(),
+        }
+        out["replica_speedup_vs_single"] = round(speedup, 3)
+    if not args.json:
+        for m in [single, sharded] + ([out["replica_group"]] if replicas
+                                      else []):
+            print(f"{m['mode']:>8} [{m['devices']} device(s)]: "
+                  f"{m['tokens']} tokens in {m['elapsed_sim']:.0f} sim-s "
+                  f"({m['throughput_tok_per_sim_s']:.3f} tok/sim-s), "
+                  f"wall {m['wall_s']:.2f}s")
+        print(f"tp={tp} arenas: {out['arena_bytes_per_device_tp']} bytes on "
+              f"each of {tp} devices vs {bytes_single} on one "
+              f"(split, not duplicated); outputs bit-identical")
+        if replicas:
+            print(f"replica group vs single device: {speedup:.2f}x "
+                  f"aggregate tokens/s over {replicas * tp} devices")
+    return out, speedup
+
+
 def run_kernel_bench(cfg, args) -> tuple[dict, float]:
     """Microbenchmark the fused paged-attention kernel vs its reference.
 
@@ -1130,6 +1303,18 @@ def main(argv=None):
                     help="skip the same-seed determinism twin drive "
                          "(smoke tier: fault-free vs chaos bit-identity "
                          "only)")
+    ap.add_argument("--tp", type=int, nargs="?", const=2, default=0,
+                    metavar="N",
+                    help="sharded workload: single device vs N-way "
+                         "head-sharded tensor parallelism vs a 2-replica "
+                         "group of N-way members — bit-identity asserted, "
+                         "per-device arena bytes reported (needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    ap.add_argument("--tp-requests", type=int, default=600,
+                    help="open-loop arrivals of the --tp workload")
+    ap.add_argument("--tp-skip-replicas", action="store_true",
+                    help="skip the replica-group drive (smoke tier: "
+                         "single vs tp only, needs just N devices)")
     ap.add_argument("--kernel-bench", action="store_true",
                     help="microbenchmark the paged-attention kernel vs ref")
     ap.add_argument("--kernel-iters", type=int, default=20)
@@ -1148,6 +1333,9 @@ def main(argv=None):
     if args.kernel_bench:
         out, speedup = run_kernel_bench(cfg, args)
         tag, key = "__kernel", "kernel"
+    elif args.tp:
+        out, speedup = run_tp(args)
+        tag, key = "__tp", "sharded"
     elif args.chaos:
         out, speedup = run_chaos(args)
         tag, key = "__chaos", "chaos"

@@ -16,7 +16,9 @@ scratch, exactly like the flash kernel carries its KV-tile loop.
 
 Layout contract: q (B, H, D); k/v pool (P, page_size, K, D); tables (B, NP)
 int32 page ids; lengths (B,) int32 valid-position counts. GQA is folded
-head-major: head h reads KV head ``h // (H // K)``.
+head-major: head h reads KV head ``h // (H // K)``. H and K are read off
+the operand shapes, so the kernel serves a tensor-parallel head slice
+(H/tp, K/tp inside ``shard_map``) exactly like the full head set.
 
 With ``window`` set the table is a **ring block table** (the sliding-window
 serving layout): entry ``e`` holds the page of the newest block

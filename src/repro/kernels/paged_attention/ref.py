@@ -27,6 +27,17 @@ cache, not merely allclose. That holds for both table layouts:
   holds O(window) pages instead of O(seq). A full-width contiguous table
   is the degenerate ring (no entry is ever reused), so callers with
   un-recycled tables can pass ``window`` unchanged.
+
+Tensor parallelism: every head count here is read off the operand shapes
+(``H`` from q, ``K`` from the pool; GQA groups = H // K), never from a
+config — so the same code runs unchanged inside ``shard_map`` on a
+per-device head slice (H/tp query heads against a pool arena holding
+Kh/tp KV heads). Each query head attends only to its own KV head, so a
+head slice's output block is bitwise the same rows of the full-H result;
+the serving layer all-gathers the blocks before the output projection
+(see ``transformer.decode_step_paged``). The Pallas kernel shares the
+shape-polymorphic contract, keeping ref/pallas parity checks valid per
+device slice too.
 """
 
 from __future__ import annotations

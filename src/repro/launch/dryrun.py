@@ -1,11 +1,13 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
-The two lines above MUST precede any other import (jax locks the device count
-on first initialization). This module is the ONLY place the 512-device
-override exists; tests and benchmarks see the real single CPU device.
+The 512-host-device override lives in :func:`configure`, called by
+:func:`main` before any jax device use — never at import time. (It used
+to be a module-level ``os.environ`` write, which meant *importing* this
+module for its constants — e.g. ``from repro.launch.dryrun import
+RESULTS`` in benchmarks — silently clobbered the process's XLA flags.)
+Tests and benchmarks see the real device set; only the dry-run CLI forces
+512 hosts, and ``configure`` raises instead of silently no-opping when
+jax has already locked its device count.
 
 Usage:
   python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k --mesh single
@@ -16,6 +18,7 @@ cell; reruns overwrite).
 """
 
 import argparse
+import os
 import dataclasses
 import json
 import pathlib
@@ -36,6 +39,27 @@ from repro.sharding import rules as R
 from repro.train.trainer import TrainConfig, build_sharded_train
 
 RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def configure(devices: int) -> None:
+    """Force ``devices`` host CPU devices for this process.
+
+    Merges the override into any existing ``XLA_FLAGS`` (replacing a prior
+    device-count flag, keeping everything else — the Makefile prepends an
+    optimization-level flag that must survive). Must run before jax
+    initializes its backends: the first device use locks the count, so if
+    that already happened this raises instead of silently lowering every
+    cell on the wrong mesh."""
+    bridge = getattr(getattr(jax, "_src", None), "xla_bridge", None)
+    if bridge is not None and getattr(bridge, "_backends", None):
+        raise RuntimeError(
+            f"jax already initialized its backends — the {devices}-host "
+            "override must land before first device use (run the dry-run "
+            "as its own process, not after other jax work)")
+    flag = f"--xla_force_host_platform_device_count={devices}"
+    kept = [f for f in os.environ.get("XLA_FLAGS", "").split()
+            if not f.startswith("--xla_force_host_platform_device_count")]
+    os.environ["XLA_FLAGS"] = " ".join(kept + [flag])
 
 SHAPES = {
     "train_4k": dict(kind="train", seq=4096, global_batch=256),
@@ -287,8 +311,10 @@ def main(argv=None):
         assert args.arch, "--arch required unless --all/--list"
         cells = [(args.arch, args.shape or "train_4k", args.mesh)]
 
-    # only lowering runs create the artifact dir — `--list` must stay
-    # side-effect-free so the artifact-gated tests keep skipping
+    # only lowering runs touch device state or create the artifact dir —
+    # `--list` must stay side-effect-free so the artifact-gated tests keep
+    # skipping (and so listing never demands an uninitialized jax)
+    configure(512)
     RESULTS.mkdir(parents=True, exist_ok=True)
     failures = 0
     for arch, shape, mesh in cells:

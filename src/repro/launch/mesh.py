@@ -32,3 +32,36 @@ def make_host_mesh():
     n = len(jax.devices())
     shape = (1, n) if n == 1 else (n, 1)
     return compat.make_mesh(shape, ("data", "model"))
+
+
+def serve_tp_mesh(tp: int, devices=None):
+    """A 1-D ``("model",)`` mesh of ``tp`` devices for the tensor-parallel
+    paged decode (:mod:`repro.serve.paged`). ``devices`` selects the
+    slice explicitly (replica pinning); default = the first ``tp`` of
+    ``jax.devices()``."""
+    devices = list(devices) if devices is not None else jax.devices()[:tp]
+    if len(devices) < tp:
+        raise ValueError(f"need {tp} devices for tp={tp}, have "
+                         f"{len(devices)} (set "
+                         "--xla_force_host_platform_device_count or run on "
+                         "a larger host)")
+    import numpy as np
+
+    return compat.make_mesh((tp,), ("model",),
+                            devices=np.asarray(devices[:tp]))
+
+
+def replica_meshes(replicas: int, tp: int, devices=None):
+    """Disjoint ``("model",)`` meshes for data-parallel replica serving:
+    ``replicas`` slices of ``tp`` devices each, carved consecutively from
+    ``devices`` (default ``jax.devices()``). Slice ``i`` gets devices
+    ``[i*tp, (i+1)*tp)`` — disjoint by construction, which is what lets
+    :meth:`~repro.serve.cluster.ServeCluster.add_replica_group` pin each
+    replica's arena and params to its own devices."""
+    devices = list(devices) if devices is not None else jax.devices()
+    need = replicas * tp
+    if len(devices) < need:
+        raise ValueError(f"need {need} devices for {replicas} replicas at "
+                         f"tp={tp}, have {len(devices)}")
+    return [serve_tp_mesh(tp, devices[i * tp:(i + 1) * tp])
+            for i in range(replicas)]

@@ -62,12 +62,12 @@ def paged_pool_init(cfg: ModelConfig, n_pages: int, page_size: int):
 
 def decode_step_paged(params, cfg: ModelConfig, pool_k, pool_v, tables,
                       lengths, tokens, append_mask=None, impl=None,
-                      window=None):
+                      window=None, tp_axis=None):
     _require_paged(cfg)
     return transformer.decode_step_paged(params, cfg, pool_k, pool_v, tables,
                                          lengths, tokens,
                                          append_mask=append_mask, impl=impl,
-                                         window=window)
+                                         window=window, tp_axis=tp_axis)
 
 
 def cache_abstract(cfg: ModelConfig, batch: int, max_len: int):

@@ -299,7 +299,7 @@ def paged_pool_init(cfg: ModelConfig, n_pages: int, page_size: int,
 
 def decode_step_paged(params, cfg: ModelConfig, pool_k, pool_v, tables,
                       lengths, tokens, append_mask=None, impl: str | None = None,
-                      window: int | None = None):
+                      window: int | None = None, tp_axis: str | None = None):
     """One serving step against the global page pool (no per-slot lanes).
 
     tokens (B,) int32; lengths (B,) int32 — positions already resident per
@@ -321,6 +321,16 @@ def decode_step_paged(params, cfg: ModelConfig, pool_k, pool_v, tables,
     batched vector, so one launch serves ragged slots; the attention itself
     is the fused paged kernel (``repro.kernels.paged_attention``), reading
     K/V in place from the pool through the block table.
+
+    ``tp_axis`` names the mesh axis this step runs tensor-parallel over
+    (inside ``shard_map``): params arrive head-sharded (wq/wk/wv slices),
+    the pool arena holds this device's KV-head slice, and the per-device
+    attention outputs are all-gathered along the head axis right before
+    the (replicated) output projection — the step's only collective. Each
+    query head's attention touches only its own KV head, so the gathered
+    head block is bitwise the single-device one; everything downstream of
+    the gather is replicated compute. ``None`` (default) is the
+    single-device path, bit-identical by construction.
     """
     from repro.kernels.paged_attention import ops as paged_ops
 
@@ -347,6 +357,11 @@ def decode_step_paged(params, cfg: ModelConfig, pool_k, pool_v, tables,
             o, pk_j, pv_j = paged_ops.paged_decode_append(
                 q[:, 0], k[:, 0], v[:, 0], pk_b[j], pv_b[j], tables, lengths,
                 append_mask=append_mask, window=window, impl=impl)
+            if tp_axis is not None:
+                # (B, H/tp, Dh) per device -> (B, H, Dh), heads in mesh
+                # order = single-device order; wo is replicated, so the
+                # projection below is bitwise the unsharded one
+                o = lax.all_gather(o, tp_axis, axis=1, tiled=True)
             x = x + jnp.einsum("bshk,hkd->bsd", o[:, None],
                                ap["wo"].astype(o.dtype))
             x, a = _ffn(x, lp, cfg, _is_moe_layer(cfg, j))

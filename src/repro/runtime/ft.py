@@ -398,6 +398,47 @@ class RequestJournal:
             raise ValueError(f"request {request_id!r} is still in flight")
         del self._records[request_id]
 
+    # -- live migration (replica drain) -----------------------------------
+
+    def transfer(self, request_id: str) -> SlotRecord:
+        """Remove and return an *in-flight* record so a sibling journal can
+        :meth:`adopt` it — the handoff half of live slot migration (a
+        replica draining its work onto its peers). Transferring a
+        completed record is an error (finished work is acknowledged where
+        it ran, never migrated)."""
+        rec = self._records[request_id]
+        if rec.completed:
+            raise ValueError(
+                f"request {request_id!r} already completed — completed "
+                "work is acknowledged in place, not migrated")
+        del self._records[request_id]
+        return rec
+
+    def adopt(self, rec: SlotRecord) -> SlotRecord:
+        """Adopt a record transferred from a sibling journal.
+
+        The source engine's emitted tokens ride along as the ``prior``
+        run, so when the adopting engine replays the request its
+        ``record_token`` cross-checks every token against the source's
+        output — migration is held to the same bit-identity bar as
+        preemption replay. ``arrival_seq`` is reassigned in adoption
+        order (the one exception to never-reassigned: the sequence is
+        journal-local, and the drain hands records over in the source's
+        FIFO order, so relative order is preserved on the sibling)."""
+        if rec.request_id in self._records:
+            raise ValueError(
+                f"request {rec.request_id!r} already journaled here — two "
+                "engines cannot both own an in-flight record")
+        if rec.completed:
+            raise ValueError(f"request {rec.request_id!r} is completed")
+        if len(rec.generated) > len(rec.prior):
+            rec.prior = list(rec.generated)
+        rec.generated = []
+        rec.arrival_seq = self._seq
+        self._seq += 1
+        self._records[rec.request_id] = rec
+        return rec
+
     def size(self) -> dict:
         """Retention counters for ``engine.stats()``: live record and
         token counts, an order-of-magnitude byte estimate, and how many

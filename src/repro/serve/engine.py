@@ -99,7 +99,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.runtime.ft import RequestJournal
-from repro.serve.paged import PagePool, paged_chunk_fn, paged_step_fn
+from repro.serve.paged import (PagePool, mesh_tp, paged_chunk_fn,
+                               paged_step_fn, place_params)
 from repro.serve.pages import PageTable
 from repro.serve.sampling import (GREEDY, SamplingParams, sample, seed_key,
                                   zero_keys)
@@ -391,7 +392,9 @@ class ContinuousBatchingEngine:
                  admission_hook=None,
                  reclaim=None,
                  chaos=None,
-                 journal_horizon: int | None = None):
+                 journal_horizon: int | None = None,
+                 mesh: Mesh | None = None,
+                 tp_axis: str = "model"):
         from repro.core.platform import Platform, XHeepConfig
 
         if slots < 1:
@@ -401,7 +404,17 @@ class ContinuousBatchingEngine:
         if prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
         self.cfg = cfg
-        self.params = params
+        # tensor parallelism: a mesh pins this engine's decode to a device
+        # slice — params land head-sharded (wq/wk/wv) via place_params,
+        # the pool arena shards its KV-head axis, and the jitted step runs
+        # under shard_map. All host bookkeeping (slots, block tables,
+        # journal, sampling chains) is mesh-invariant, so TP changes
+        # where bytes live, never which tokens come out.
+        self.mesh = mesh
+        self.tp_axis = tp_axis
+        self.tp = mesh_tp(mesh, tp_axis) if mesh is not None else 1
+        self.params = (place_params(cfg, params, mesh, tp_axis)
+                       if mesh is not None else params)
         self.n_slots = slots
         self.max_len = max_len
         owns_platform = platform is None
@@ -453,6 +466,10 @@ class ContinuousBatchingEngine:
         if pool is not None and not paged:
             raise ValueError("a shared pool is a paged-backend resource; "
                              "drop it or drop paged=False")
+        if mesh is not None and not paged:
+            raise ValueError(
+                "tensor parallelism is a paged-backend feature: the lane "
+                "backend has no sharded arena to decode against")
         self.paged = paged
 
         # pass `page_table` to share one prefix store across engines (same
@@ -486,7 +503,7 @@ class ContinuousBatchingEngine:
                 # a windowed engine provisions O(window) pages per slot,
                 # not O(device_len) — the ring bound is the pool budget
                 self._pool = PagePool(slots * self._np_slot + cap, self._ps)
-            self._arena = self._pool.arena(cfg)
+            self._arena = self._pool.arena(cfg, mesh=mesh, tp_axis=tp_axis)
         if page_table is not None:
             self.pages: PageTable | None = page_table
         elif page_size:
@@ -542,8 +559,10 @@ class ContinuousBatchingEngine:
         self.max_replays = 16
 
         if self.paged:
-            self._pstep = paged_step_fn(cfg, self._window)
-            self._pchunk = (paged_chunk_fn(cfg, prefill_chunk, self._window)
+            self._pstep = paged_step_fn(cfg, self._window, mesh=mesh,
+                                        tp_axis=tp_axis)
+            self._pchunk = (paged_chunk_fn(cfg, prefill_chunk, self._window,
+                                           mesh=mesh, tp_axis=tp_axis)
                             if prefill_chunk > 1 else None)
             self._cache = None
         else:
@@ -1336,6 +1355,7 @@ class ContinuousBatchingEngine:
             "prefill_chunk": self.prefill_chunk,
             "backend": "paged" if self.paged else "lanes",
             "async_dispatch": self.async_dispatch,
+            "tp": self.tp,
             "window": self._window,
             "table_entries_per_slot": self._np_slot if self.paged else None,
             "pages_recycled": self.pages_recycled,

@@ -55,17 +55,53 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from repro.core import compat
 from repro.models import registry
 from repro.models.config import ModelConfig
 from repro.serve.sampling import sample, split_keys
+from repro.sharding import rules as R
 
 __all__ = ["PagePool", "PoolArena", "pool_signature", "paged_step_fn",
-           "paged_chunk_fn"]
+           "paged_chunk_fn", "place_params", "mesh_tp"]
 
 # jitted paged kernels shared across engine instances (jax then caches
 # compilations per pool/table shape)
 _PAGED_FNS: dict = {}
+
+# host params tree -> per-mesh placed copy (weights load once; every
+# engine on the same mesh shares the placed tree). Keyed by object id —
+# the cluster already enforces same-namespace params identity by id.
+_PLACED_PARAMS: dict = {}
+
+
+def mesh_tp(mesh: Mesh, tp_axis: str = "model") -> int:
+    """Size of the tensor-parallel axis of ``mesh`` (loud on a bad axis)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if tp_axis not in sizes:
+        raise ValueError(f"mesh {mesh.axis_names} has no axis {tp_axis!r}")
+    return sizes[tp_axis]
+
+
+def place_params(cfg: ModelConfig, params, mesh: Mesh,
+                 tp_axis: str = "model"):
+    """Shard a host params tree onto ``mesh`` for the TP paged decode.
+
+    wq/wk/wv land head-sharded over ``tp_axis``; everything else (embed,
+    norms, MLP, wo, head) is replicated — the layout
+    :func:`repro.sharding.rules.serve_param_specs` derives from the
+    registry's logical axes. Placement is cached per (params, mesh, axis):
+    replicas sharing one checkpoint share one device copy.
+    """
+    key = (id(params), mesh, tp_axis)
+    if key not in _PLACED_PARAMS:
+        R.validate_serve_tp(cfg, mesh_tp(mesh, tp_axis))
+        specs = R.serve_param_specs(cfg, tp_axis)
+        _PLACED_PARAMS[key] = jax.tree.map(
+            lambda p, s: jax.device_put(p, NamedSharding(mesh, s)),
+            params, specs)
+    return _PLACED_PARAMS[key]
 
 
 def pool_signature(cfg: ModelConfig) -> tuple:
@@ -115,15 +151,48 @@ class PagePool:
         # allocation failure. None = off.
         self.fault_hook = None
 
-    def arena(self, cfg: ModelConfig) -> PoolArena:
+    def arena(self, cfg: ModelConfig, mesh: Mesh | None = None,
+              tp_axis: str = "model") -> PoolArena:
         """Device arena for ``cfg``'s cache signature (created on first
-        use). Same-signature configs get the *same* arena object."""
-        sig = pool_signature(cfg)
+        use). Same-signature configs on the same mesh get the *same*
+        arena object.
+
+        With ``mesh`` the arena's KV-head axis is sharded over
+        ``tp_axis`` (:func:`repro.sharding.rules.serve_pool_spec`): each
+        device holds ``Kh/tp`` heads of every page — the arena is
+        *split*, not duplicated, so ``tp`` devices cost the same KV bytes
+        as one. Page ids (and the host allocator) are mesh-invariant;
+        arenas on different meshes are distinct device storage keyed
+        ``(signature, mesh)``, because a page's bytes physically live
+        only on the mesh slice that wrote them — replicas on disjoint
+        slices therefore never share an arena (see
+        :meth:`ServeCluster.add_replica_group`).
+        """
+        sig = (pool_signature(cfg), mesh, tp_axis if mesh is not None
+               else None)
         if sig not in self._arenas:
             k, v = registry.paged_pool_init(cfg, self.n_pages + 1,
                                             self.page_size)
+            if mesh is not None:
+                R.validate_serve_tp(cfg, mesh_tp(mesh, tp_axis))
+                sharding = NamedSharding(mesh, R.serve_pool_spec(tp_axis))
+                k = jax.device_put(k, sharding)
+                v = jax.device_put(v, sharding)
             self._arenas[sig] = PoolArena(k, v)
         return self._arenas[sig]
+
+    def bytes_by_device(self) -> dict[str, int]:
+        """Real KV bytes resident per device, summed over every arena's
+        addressable shards — the number that shows a TP arena is split
+        (Kh/tp heads per device) rather than duplicated. Complements
+        :attr:`device_pages`, which counts logical pages per arena."""
+        out: dict[str, int] = {}
+        for arena in self._arenas.values():
+            for arr in (arena.k, arena.v):
+                for shard in arr.addressable_shards:
+                    dev = str(shard.device)
+                    out[dev] = out.get(dev, 0) + shard.data.nbytes
+        return out
 
     def _check(self, idx: int) -> None:
         if not 0 <= idx < self.n_pages:
@@ -209,7 +278,42 @@ class PagePool:
         return {i: int(r) for i, r in enumerate(self._refs) if r > 0}
 
 
-def paged_step_fn(cfg: ModelConfig, window: int | None = None):
+def _decode_call(cfg: ModelConfig, window: int | None,
+                 mesh: Mesh | None, tp_axis: str):
+    """The decode body shared by the step fns: a direct
+    ``registry.decode_step_paged`` on one device, or the same step under
+    ``shard_map`` on a mesh — params and pool arrive as per-device head
+    slices (in_specs derived from the registry's logical axes), block
+    tables / lengths / tokens ride replicated, and the one collective is
+    the head all-gather inside the transformer (``tp_axis``). Outputs:
+    logits replicated (every device computes the identical post-gather
+    tail), pools sharded as they came in.
+    """
+    if mesh is None:
+        def call(params, pool_k, pool_v, tables, lengths, tok, mask):
+            return registry.decode_step_paged(
+                params, cfg, pool_k, pool_v, tables, lengths, tok,
+                append_mask=mask, window=window)
+        return call
+
+    pool_spec = R.serve_pool_spec(tp_axis)
+    param_specs = R.serve_param_specs(cfg, tp_axis)
+    rep = PartitionSpec()
+
+    def local(params, pool_k, pool_v, tables, lengths, tok, mask):
+        return registry.decode_step_paged(
+            params, cfg, pool_k, pool_v, tables, lengths, tok,
+            append_mask=mask, window=window, tp_axis=tp_axis)
+
+    return compat.shard_map(
+        local, mesh=mesh,
+        in_specs=(param_specs, pool_spec, pool_spec, rep, rep, rep, rep),
+        out_specs=(rep, pool_spec, pool_spec),
+        check_vma=False)
+
+
+def paged_step_fn(cfg: ModelConfig, window: int | None = None,
+                  mesh: Mesh | None = None, tp_axis: str = "model"):
     """Jitted single-token paged decode over every lane.
 
     Signature: ``(params, pool_k, pool_v, tables, lengths, toks, feedback,
@@ -227,15 +331,22 @@ def paged_step_fn(cfg: ModelConfig, window: int | None = None):
     semantics — pass the engine's *clamped* window (``min(cfg.sliding_
     window, device cache length)``) so the decode stays bit-identical to
     the lane ring cache. Pools and keys are donated.
+
+    ``mesh`` switches the decode to tensor parallelism over ``tp_axis``
+    (:func:`_decode_call`): the same jitted step, with the transformer
+    body under ``shard_map`` on head-sliced params and pool. Sampling
+    runs outside the sharded region on the replicated logits, so the TP
+    step's tokens are bit-identical to the single-device step's.
     """
-    key = ("step", cfg, window)
+    key = ("step", cfg, window, mesh, tp_axis if mesh is not None else None)
     if key not in _PAGED_FNS:
+        decode = _decode_call(cfg, window, mesh, tp_axis)
+
         def step(params, pool_k, pool_v, tables, lengths, toks, feedback,
                  prev, mask, emit, keys, temp, top_k, top_p):
             tok = jnp.where(feedback, prev, toks)
-            logits, pool_k, pool_v = registry.decode_step_paged(
-                params, cfg, pool_k, pool_v, tables, lengths, tok,
-                append_mask=mask, window=window)
+            logits, pool_k, pool_v = decode(
+                params, pool_k, pool_v, tables, lengths, tok, mask)
             carry, use = split_keys(keys)
             nxt = jax.vmap(sample)(logits, use, temp, top_k, top_p)
             keys = jnp.where(emit[:, None], carry, keys)
@@ -245,7 +356,8 @@ def paged_step_fn(cfg: ModelConfig, window: int | None = None):
     return _PAGED_FNS[key]
 
 
-def paged_chunk_fn(cfg: ModelConfig, chunk: int, window: int | None = None):
+def paged_chunk_fn(cfg: ModelConfig, chunk: int, window: int | None = None,
+                   mesh: Mesh | None = None, tp_axis: str = "model"):
     """Jitted chunked step: up to ``chunk`` tokens per lane in one launch.
 
     Scans the single-token paged step; iterations past a lane's ``count``
@@ -258,10 +370,14 @@ def paged_chunk_fn(cfg: ModelConfig, chunk: int, window: int | None = None):
     prefill's first generated token is bit-identical to the unchunked
     path's — and the split is kept only where ``emit`` is set (lanes
     whose prefill completes this launch, and decode lanes). ``window``
-    as in :func:`paged_step_fn`. Pools and keys are donated.
+    and ``mesh``/``tp_axis`` as in :func:`paged_step_fn` (the sharded
+    decode runs per scan iteration; the scan carry is the sharded pool).
     """
-    key = ("chunk", cfg, chunk, window)
+    key = ("chunk", cfg, chunk, window, mesh,
+           tp_axis if mesh is not None else None)
     if key not in _PAGED_FNS:
+        decode = _decode_call(cfg, window, mesh, tp_axis)
+
         def step(params, pool_k, pool_v, tables, lengths, toks, counts,
                  feedback, prev, emit, keys, temp, top_k, top_p):
             carry_keys, use = split_keys(keys)
@@ -270,9 +386,9 @@ def paged_chunk_fn(cfg: ModelConfig, chunk: int, window: int | None = None):
                 pool_k, pool_v = carry
                 j, tok_j = xs
                 tok = jnp.where((j == 0) & feedback, prev, tok_j)
-                logits, pool_k, pool_v = registry.decode_step_paged(
-                    params, cfg, pool_k, pool_v, tables, lengths + j, tok,
-                    append_mask=j < counts, window=window)
+                logits, pool_k, pool_v = decode(
+                    params, pool_k, pool_v, tables, lengths + j, tok,
+                    j < counts)
                 return ((pool_k, pool_v),
                         jax.vmap(sample)(logits, use, temp, top_k, top_p))
 

@@ -349,7 +349,10 @@ class ClusterSimulator:
         self.clock = clock
         self.step_time = step_time
         self.dispatch_time = dispatch_time
-        self.pending = _TraceFeed(trace, engines=set(cluster.engines))
+        # replica groups are valid targets too (cluster.submit routes them)
+        self.pending = _TraceFeed(
+            trace, engines=getattr(cluster, "targets", None)
+            or set(cluster.engines))
 
     def _deliver_due(self) -> None:
         while self.pending and self.pending[0].time <= self.clock.t:

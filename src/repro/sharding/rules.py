@@ -160,6 +160,94 @@ def tree_shardings(abstract: Any, axes_tree: Any, rules: Rules, mesh: Mesh) -> A
                         is_leaf=lambda x: isinstance(x, PartitionSpec))
 
 
+# ---------------------------------------------------------------------------
+# Serving tensor parallelism (head-axis sharding for the paged decode)
+# ---------------------------------------------------------------------------
+
+
+def validate_serve_tp(cfg, tp: int) -> None:
+    """Loudly reject a (config, tp) pair the head-sharded paged decode
+    cannot serve — the serving counterpart of :func:`spec_for`'s silent
+    divisibility fallback, which would quietly replicate a KV cache the
+    caller asked to shard.
+
+    Requirements (each failure names its cause):
+
+    * a transformer-family config with paged KV decode (MoE and the
+      SSM/hybrid lane-fallback families have no head axis to shard);
+    * ``n_kv_heads % tp == 0`` — the pool arenas shard over the KV-head
+      axis, so every device must hold whole KV heads (this also implies
+      ``n_heads % tp == 0``: query heads are ``groups × n_kv_heads``).
+      MQA (``n_kv_heads == 1``) therefore cannot shard beyond tp=1.
+    """
+    from repro.models import registry
+
+    if tp < 1:
+        raise ValueError(f"tp must be >= 1, got {tp}")
+    if not registry.supports_paged(cfg):
+        raise ValueError(
+            f"{cfg.name} ({cfg.family}) cannot serve tensor-parallel: the "
+            "head-sharded decode requires the paged backend (MoE routing "
+            "and SSM/hybrid lane caches have no KV-head axis to shard)")
+    if tp == 1:
+        return
+    if cfg.n_kv_heads % tp:
+        detail = ("MQA has a single shared KV head" if cfg.n_kv_heads == 1
+                  else f"{cfg.n_kv_heads} KV heads")
+        raise ValueError(
+            f"{cfg.name}: n_kv_heads {cfg.n_kv_heads} % tp {tp} != 0 — the "
+            f"pool arenas shard whole KV heads per device ({detail}, "
+            f"cannot split across {tp} devices)")
+
+
+def serve_param_spec(axes, tp_axis: str = "model") -> PartitionSpec:
+    """PartitionSpec of one parameter under serving tensor parallelism.
+
+    The rule is the logical-axis rendition of Megatron-style attention TP:
+    a projection *into* head space (its :class:`~repro.sharding.params.
+    Axes` contain HEADS/KV_HEADS and end in HEAD_DIM — wq/wk/wv) shards
+    that head axis over ``tp_axis``; everything else — including the
+    output projection wo, whose trailing axis is EMBED and which consumes
+    the all-gathered heads — stays replicated, so the only collective in
+    the decode step is the one all-gather at the output projection.
+    """
+    dims = tuple(axes)
+    if not dims or dims[-1] != lax_.HEAD_DIM:
+        return PartitionSpec()
+    out: list = []
+    sharded = False
+    for name in dims:
+        if not sharded and name in (lax_.HEADS, lax_.KV_HEADS):
+            out.append(tp_axis)
+            sharded = True
+        else:
+            out.append(None)
+    if not sharded:
+        return PartitionSpec()
+    while out and out[-1] is None:
+        out.pop()
+    return PartitionSpec(*out)
+
+
+def serve_param_specs(cfg, tp_axis: str = "model"):
+    """Tree of per-parameter PartitionSpecs for the TP paged decode,
+    derived from the registry's own logical-axis declarations (one source
+    of truth with training: :func:`repro.sharding.params.axes_tree`)."""
+    from repro.models import registry
+    from repro.sharding.params import axes_tree, is_axes
+
+    decls = registry.decls(cfg)
+    return jax.tree.map(lambda ax: serve_param_spec(ax, tp_axis),
+                        axes_tree(decls), is_leaf=is_axes)
+
+
+def serve_pool_spec(tp_axis: str = "model") -> PartitionSpec:
+    """PartitionSpec of a KV pool arena ``(L, P, page, Kh, Dh)``: sharded
+    over the KV-head axis only — page ids (and the block tables indexing
+    them) stay device-invariant, so host-side allocation is unchanged."""
+    return PartitionSpec(None, None, None, tp_axis)
+
+
 def shard_bytes(shape: Sequence[int], spec: PartitionSpec, mesh: Mesh,
                 dtype_bytes: int) -> int:
     """Per-device bytes of an array under a spec (for memory napkin math)."""

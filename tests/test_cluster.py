@@ -118,8 +118,8 @@ def test_same_namespace_different_model_rejected():
         add_smoke_engine(cluster, "stablelm_3b", name="c", namespace="shared")
     # distinct namespace with the distinct model is fine
     add_smoke_engine(cluster, "stablelm_3b", name="d")
-    # and duplicate engine names are not
-    with pytest.raises(ValueError, match="duplicate engine name"):
+    # and duplicate target names (engine or replica group) are not
+    with pytest.raises(ValueError, match="duplicate target name"):
         add_smoke_engine(cluster, name="a", namespace="granite")
 
 

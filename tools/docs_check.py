@@ -21,8 +21,9 @@ Checks, failing the build with a listing of every violation:
    * two-decimal speedups (``1.84×`` / ``2.82x``) must equal some numeric
      leaf of the JSON rounded the same way — approximations written with
      one decimal (``~1.8×``) are deliberately exempt;
-   * ``A vs B`` integer pairs on lines mentioning pages (the device-page
-     savings quotes) must both be integer leaves of the JSON;
+   * ``A vs B`` integer pairs on lines mentioning pages or arenas (the
+     device-page savings and sharded-arena-split quotes) must both be
+     integer leaves of the JSON;
    * attainment percentages (``68.2%``) on lines mentioning attainment
      must equal a fractional leaf of the JSON scaled to percent, and
      decimal figures on lines mentioning TTFT or goodput (``98.0``,
@@ -156,12 +157,12 @@ def check_bench_numbers() -> list[str]:
                         f"BENCH_serve.json (stale number? run `make "
                         f"bench-json` + `make bench-table`)")
             low = line.lower()
-            if "page" in low:
+            if "page" in low or "arena" in low:
                 for a, b in _VS_PAIR.findall(line):
                     for n in (int(a), int(b)):
                         if n not in ints:
                             errors.append(
-                                f"{rel}:{lineno}: page count {n} (in "
+                                f"{rel}:{lineno}: page/arena count {n} (in "
                                 f"'{a} vs {b}') not in BENCH_serve.json")
             if "attainment" in low:
                 for q in _PCT.findall(line):
