@@ -9,6 +9,9 @@
 #                     under a nonzero fault rate, bit-identity asserted, < 10 s
 #   make tp-smoke     fast sharding smoke: seeded 1k-request trace on 2 forced
 #                     host devices, tp=2 asserted bit-identical to 1 device, < 15 s
+#   make energy-smoke fast metering smoke: one seeded trace through four
+#                     power-policy variants, conservation + bit-identity
+#                     asserted, < 10 s
 #   make docs-check   intra-repo links in README/docs + serve/* docstrings
 #
 # bench-serve forwards extra flags given after `--` (and anything in
@@ -23,19 +26,21 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 BENCH_PASSTHRU = $(filter-out bench-serve,$(MAKECMDGOALS))
 
 .PHONY: test-fast test-all bench-serve bench-json bench-table docs-check \
-	sim-smoke chaos-smoke tp-smoke
+	sim-smoke chaos-smoke tp-smoke energy-smoke
 
 # Fast tier compiles at XLA opt level 0: the suite is compile-bound (tiny
 # smoke models, hundreds of small programs) and every correctness assertion
 # is backend-consistent (bit-identity is always engine-vs-engine within one
 # process; kernel parity uses tolerances). The full tier-1 gate (test-all)
 # keeps full optimization fidelity.
+# -p no:cacheprovider: no .pytest_cache — stale last-failed state on CI
+# runners is a flakiness source, and the suite never uses the cache
 test-fast: docs-check
 	XLA_FLAGS="--xla_backend_optimization_level=0 $$XLA_FLAGS" \
-		$(PY) -m pytest -q -m "not slow"
+		$(PY) -m pytest -q -p no:cacheprovider -m "not slow"
 
 test-all:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q -p no:cacheprovider
 
 bench-serve:
 	$(PY) benchmarks/serve_bench.py --requests 16 --slots 4 --gap 2.0 \
@@ -65,6 +70,8 @@ bench-json:
 	XLA_FLAGS="--xla_force_host_platform_device_count=4 $$XLA_FLAGS" \
 		$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
 		--tp 2 --tp-requests 600 --json --bench-json
+	$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
+		--energy --json --bench-json
 
 # fast-tier open-loop smoke: a seeded 1k-request trace through the full
 # SLO-aware pipeline (loadgen -> cluster -> metrics), < 10 s on CPU
@@ -94,6 +101,16 @@ tp-smoke:
 		$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
 		--tp 2 --tp-requests 1000 --tp-skip-replicas --json > /dev/null
 	@echo "tp-smoke: 1k-request tp=2 trace bit-identical, arenas split OK"
+
+# fast-tier energy smoke: one seeded staggered trace through the four
+# power-policy drives (unmetered control, host-only, clock-gated,
+# DVFS-throttled) — per-request joule conservation and token bit-identity
+# are asserted inside the benchmark before it prints anything
+energy-smoke:
+	XLA_FLAGS="--xla_backend_optimization_level=0 $$XLA_FLAGS" \
+		$(PY) benchmarks/serve_bench.py --slots 4 --prefill-chunk 4 \
+		--energy 100 --json > /dev/null
+	@echo "energy-smoke: metered trace conserved + bit-identical OK"
 
 # regenerate the README benchmark table from the committed BENCH_serve.json
 # (docs-check fails when the two drift, so PRs stop hand-editing numbers)

@@ -1230,6 +1230,88 @@ def run_kernel_bench(cfg, args) -> tuple[dict, float]:
     return out, 1.0
 
 
+def run_energy(cfg, args) -> tuple[dict, float]:
+    """Tokens/joule across power-management policies, one identical trace.
+
+    Four same-seed drives of the async paged engine: an unmetered control,
+    a metered engine with idle-bank clock gating *off* (the host-only
+    baseline — idle banks burn full ON duty-0 power), the default metered
+    engine (idle banks fall to gated leakage), and a DVFS-throttled engine
+    pinned at the ``nominal`` operating point (lower voltage/frequency, the
+    paper's §IV-D tradeoff). Outputs are asserted bit-identical across all
+    four — metering and throttling change *when* energy is charged, never
+    *what* the engine computes — and each metered drive's conservation
+    invariant (total == attributed + overhead == Σ per-request µJ +
+    overhead) is checked before any number is reported.
+    """
+    params = P.init_tree(registry.decls(cfg), jax.random.key(args.seed))
+    n = args.energy
+
+    def drive(mode, **engine_kwargs):
+        reqs = build_requests(n, args.prompt_len, args.new_tokens)
+        clock = FakeClock()
+        eng = ContinuousBatchingEngine(cfg, params, slots=args.slots,
+                                       max_len=args.max_len, clock=clock,
+                                       prefill_chunk=args.prefill_chunk,
+                                       async_dispatch=True, **engine_kwargs)
+        sim = Simulator(eng, staggered_trace(reqs, gap=args.gap), clock,
+                        step_time=args.step_time,
+                        dispatch_time=args.dispatch_time)
+        report = sim.run()
+        entry = {"mode": mode, "tokens": report.tokens_generated,
+                 "completed": len(report.completed)}
+        if eng._meter is not None:
+            st = eng.stats()["energy"]
+            attributed = sum(r.energy_uj for r in report.completed)
+            if not math.isclose(st["attributed_uj"], attributed,
+                                rel_tol=1e-9):
+                raise AssertionError(
+                    f"{mode}: attributed energy {st['attributed_uj']} != "
+                    f"Σ Request.energy_uj {attributed}")
+            if not math.isclose(st["total_uj"],
+                                st["attributed_uj"] + st["overhead_uj"],
+                                rel_tol=1e-12):
+                raise AssertionError(f"{mode}: energy conservation violated")
+            entry.update(
+                point=st["point"],
+                total_uj=round(report.energy_uj, 3),
+                uj_per_token=round(report.energy_uj
+                                   / report.tokens_generated, 4),
+                tokens_per_joule=round(report.tokens_per_joule, 1))
+        return entry, eng
+
+    control, eng_control = drive("control", metered=False)
+    host_only, eng_host = drive("host-only", gate_idle_banks=False)
+    gated, eng_gated = drive("clock-gated")
+    dvfs, eng_dvfs = drive("dvfs-throttled", operating_point="nominal")
+    _assert_identical([("control", eng_control), ("host-only", eng_host),
+                       ("clock-gated", eng_gated),
+                       ("dvfs-throttled", eng_dvfs)])
+
+    gating_gain = gated["tokens_per_joule"] / host_only["tokens_per_joule"]
+    dvfs_gain = dvfs["tokens_per_joule"] / gated["tokens_per_joule"]
+    out = {"arch": cfg.name, "requests": n, "slots": args.slots,
+           "gap": args.gap, "prompt_len": args.prompt_len,
+           "new_tokens": args.new_tokens, "max_len": args.max_len,
+           "prefill_chunk": args.prefill_chunk,
+           "dispatch_time": args.dispatch_time, "step_time": args.step_time,
+           "control": control, "host_only": host_only,
+           "clock_gated": gated, "dvfs_throttled": dvfs,
+           "gating_gain_tokens_per_joule": round(gating_gain, 3),
+           "dvfs_gain_tokens_per_joule": round(dvfs_gain, 3)}
+    if not args.json:
+        for entry in (host_only, gated, dvfs):
+            print(f"{entry['mode']:>15} [{entry['point']}]: "
+                  f"{entry['tokens']} tokens, "
+                  f"{entry['total_uj'] / 1e6:.4f} J, "
+                  f"{entry['tokens_per_joule']:.1f} tokens/J "
+                  f"({entry['uj_per_token']:.2f} uJ/token)")
+        print(f"clock gating vs host-only: {gating_gain:.2f}x tokens/J; "
+              f"DVFS nominal vs max: {dvfs_gain:.2f}x tokens/J; "
+              f"outputs bit-identical across all four drives")
+    return out, gated["tokens_per_joule"]
+
+
 def _merge_bench_json(key: str, payload: dict) -> None:
     data = {}
     if BENCH_JSON.exists():
@@ -1303,6 +1385,13 @@ def main(argv=None):
                     help="skip the same-seed determinism twin drive "
                          "(smoke tier: fault-free vs chaos bit-identity "
                          "only)")
+    ap.add_argument("--energy", type=int, nargs="?", const=1000, default=0,
+                    metavar="N",
+                    help="energy workload: N staggered requests driven "
+                         "through four power-management variants (unmetered "
+                         "control, host-only, clock-gated, DVFS-throttled) "
+                         "— bit-identity and per-request joule conservation "
+                         "are asserted, tokens/joule reported per variant")
     ap.add_argument("--tp", type=int, nargs="?", const=2, default=0,
                     metavar="N",
                     help="sharded workload: single device vs N-way "
@@ -1339,6 +1428,9 @@ def main(argv=None):
     elif args.chaos:
         out, speedup = run_chaos(args)
         tag, key = "__chaos", "chaos"
+    elif args.energy:
+        out, speedup = run_energy(cfg, args)
+        tag, key = "__energy", "energy"
     elif args.sampling:
         out, speedup = run_sampling(args)
         tag, key = "__sampling", "sampling"

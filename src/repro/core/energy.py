@@ -249,6 +249,63 @@ def gp_trim_saving(app: AppProfile) -> float:
 
 
 # ---------------------------------------------------------------------------
+# Serving operating points (DVFS analogue for the serving stack)
+# ---------------------------------------------------------------------------
+
+# Cycle model for the serving energy meter: a decode token replays the whole
+# cached context (memory-bound), a prefill token is written once. The absolute
+# numbers are model constants (they scale every per-token figure together);
+# what the calibration pins down is the *ratio* between operating points,
+# which inherits the paper's §IV-D DVFS curve through leak/dyn voltage
+# scaling below.
+CYCLES_PER_DECODE_TOKEN = 2e6
+CYCLES_PER_PREFILL_TOKEN = 1e6
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatingPoint:
+    """One DVFS point of the serving platform (paper §IV-D).
+
+    ``max`` is the 470 MHz/1.2 V corner the engine boots at; ``nominal`` is
+    the 170 MHz/0.8 V point the DVFS-throttle policy drops to. The energy
+    meter charges dynamic energy ∝ dyn_scale (CV²·cycles — frequency
+    cancels) and leakage ∝ leak_scale × time (frequency-dependent), so the
+    tokens/joule ratio between the two points lands on the calibrated
+    ~2.1× energy ratio of ``dvfs_ratios()``.
+    """
+
+    name: str
+    freq_mhz: float
+    voltage: float
+
+    @property
+    def leak_scale(self) -> float:
+        """Leakage multiplier vs the 0.8 V baseline at this voltage."""
+        return leak_scale(self.voltage)
+
+    @property
+    def dyn_scale(self) -> float:
+        """Dynamic-energy multiplier vs the 0.8 V baseline at this voltage."""
+        return dyn_scale(self.voltage)
+
+
+OPERATING_POINTS: dict[str, OperatingPoint] = {
+    "max": OperatingPoint("max", freq_mhz=470.0, voltage=1.2),
+    "nominal": OperatingPoint("nominal", freq_mhz=170.0, voltage=0.8),
+}
+
+
+def operating_point(name: str) -> OperatingPoint:
+    """Look up a named DVFS point, with a helpful error on typos."""
+    try:
+        return OPERATING_POINTS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown operating point {name!r} "
+            f"(have {sorted(OPERATING_POINTS)})") from None
+
+
+# ---------------------------------------------------------------------------
 # TPU-scale energy reporting (the platform mechanism at pod scale)
 # ---------------------------------------------------------------------------
 

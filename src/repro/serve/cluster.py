@@ -127,18 +127,41 @@ class PowerBudget:
     ``freq_mhz`` instead (meaningful when the platform's domains carry
     real leakage/dynamic coefficients). Either or both may be set; a bank
     that is already awake never re-charges the budget.
+
+    Two energy-aware levers richer than a stall (PR 10):
+
+    * ``throttle_point`` — the DVFS analogue of the paper's §IV-D curve:
+      instead of stalling the first admission that would bust the
+      envelope, drop the target engine's metered operating point to this
+      name (e.g. ``"nominal"`` — calibrated ~5.9× lower power than
+      ``"max"``) and admit. An engine already throttled to the point
+      stalls as before, so the budget still binds.
+    * ``max_uj_per_token`` — energy-aware admission control: shed a
+      queue head when the engine's projected marginal joules/token
+      exceeds the cap (a per-request ``energy_cap_uj_per_token``
+      overrides this cluster-wide default).
     """
 
     max_awake_banks: int | None = None
     budget_uw: float | None = None
     freq_mhz: float = 100.0
+    throttle_point: str | None = None
+    max_uj_per_token: float | None = None
 
     def __post_init__(self):
-        if self.max_awake_banks is None and self.budget_uw is None:
-            raise ValueError("budget needs max_awake_banks or budget_uw")
+        if (self.max_awake_banks is None and self.budget_uw is None
+                and self.max_uj_per_token is None):
+            raise ValueError("budget needs max_awake_banks, budget_uw, or "
+                             "max_uj_per_token")
         if self.max_awake_banks is not None and self.max_awake_banks < 1:
             raise ValueError("max_awake_banks must be >= 1 (0 can never "
                              "admit anything)")
+        if self.max_uj_per_token is not None and self.max_uj_per_token <= 0:
+            raise ValueError("max_uj_per_token must be > 0")
+        if self.throttle_point is not None:
+            from repro.core.energy import operating_point
+
+            operating_point(self.throttle_point)   # fail fast on typos
 
     def would_exceed(self, platform, bank: str) -> bool:
         """True when waking ``bank`` (if it is not already ``ON``) would
@@ -259,6 +282,8 @@ class ServeCluster:
         self._rr_offset = 0
         self.steps = 0
         self.power_stalls = 0          # admissions stalled by the budget
+        self.dvfs_throttles = 0        # engines dropped to the throttle point
+        self.energy_sheds = 0          # heads shed by the joules/token cap
         self.wrr_stalls = 0            # admissions deferred to the next round
         self.sheds = 0                 # SLO-busted heads dropped at admission
         self.slo_preempts = 0          # SLO-busting tails demoted to the back
@@ -555,6 +580,23 @@ class ServeCluster:
                     and self.clock() - request.arrival_time > slo.ttft):
                 self.sheds += 1
                 return SHED
+        if self.budget is not None or getattr(
+                request, "energy_cap_uj_per_token", None) is not None:
+            # energy-aware admission control: shed a head whose projected
+            # marginal joules/token busts its cap (per-request cap wins
+            # over the cluster-wide budget default). Same journal-state
+            # exemption as the TTFT shed: demoted/replayed heads must
+            # finish, so only fresh heads are sheddable
+            cap = getattr(request, "energy_cap_uj_per_token", None)
+            if cap is None and self.budget is not None:
+                cap = self.budget.max_uj_per_token
+            meter = getattr(eng, "_meter", None)
+            if (cap is not None and meter is not None
+                    and request.slo_preempts == 0
+                    and not eng.journal.has(request.id)
+                    and meter.projected_uj_per_token() > cap):
+                self.energy_sheds += 1
+                return SHED
         if self.policy.scheduler == "drr":
             cost = len(request.prompt) + request.max_new_tokens
             if self._deficit.get(eng.name, 0.0) < cost:
@@ -566,8 +608,19 @@ class ServeCluster:
         bank = eng._slot_bank[slot_idx]
         if self.budget is not None and self.budget.would_exceed(
                 self.platform, bank):
-            self.power_stalls += 1
-            return False
+            # DVFS throttle: the first violation on a metered engine that
+            # is not yet at the throttle point drops it there (the paper's
+            # §IV-D move — calibrated ~5.9× platform power) and admits;
+            # an already-throttled engine stalls as before, so the
+            # envelope still binds
+            meter = getattr(eng, "_meter", None)
+            if (self.budget.throttle_point is not None and meter is not None
+                    and meter.point.name != self.budget.throttle_point):
+                eng.set_operating_point(self.budget.throttle_point)
+                self.dvfs_throttles += 1
+            else:
+                self.power_stalls += 1
+                return False
         if self.policy.scheduler == "drr":
             self._deficit[eng.name] -= (len(request.prompt)
                                         + request.max_new_tokens)
@@ -818,6 +871,10 @@ class ServeCluster:
         eng.completed = old.completed
         eng._ids = old._ids
         eng._replay_counts = old._replay_counts
+        # accumulated joules survive the crash — the meter is host-side
+        # accounting the coordinator keeps, like the monotone counters
+        # above (the fresh engine's own meter is discarded)
+        eng._meter = old._meter
         self.engines[name] = eng       # same key: dict/rotation order kept
         tracked = self._requests.get(name, {})
         for rid in [r for r, req in tracked.items()
@@ -911,9 +968,13 @@ class ServeCluster:
         """Cluster counters plus every tenant's ``engine.stats()`` (one
         source of truth: the pool/table numbers inside each tenant's entry
         describe the same shared objects)."""
+        meters = [e._meter for e in self.engines.values()
+                  if e._meter is not None]
         return {
             "steps": self.steps,
             "power_stalls": self.power_stalls,
+            "dvfs_throttles": self.dvfs_throttles,
+            "energy_sheds": self.energy_sheds,
             "wrr_stalls": self.wrr_stalls,
             "scheduler": self.policy.scheduler,
             "sheds": self.sheds,
@@ -922,6 +983,12 @@ class ServeCluster:
             "groups": {g: list(ms) for g, ms in self._groups.items()},
             "migrations": self.migrations,
             "awake_banks": self.awake_banks(),
+            "energy": {
+                "total_uj": sum(m.total_uj for m in meters),
+                "attributed_uj": sum(m.attributed_uj for m in meters),
+                "overhead_uj": sum(m.overhead_uj for m in meters),
+                "metered_engines": len(meters),
+            },
             "faults": {
                 "step_faults": self.step_faults,
                 "alloc_faults": self.alloc_faults,

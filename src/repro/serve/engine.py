@@ -302,6 +302,11 @@ class Request:
     generated token (TTFT = that minus ``arrival_time``);
     ``slo_preempts`` counts scheduler-driven preempt-and-requeue demotions
     (see :meth:`ContinuousBatchingEngine.preempt_slot`).
+    ``energy_uj`` accumulates the joules a metered engine attributes to
+    this request (prefill + decode + page holding + retention — replay
+    energy after a preemption or fault is charged on top, like latency);
+    ``energy_cap_uj_per_token`` is a tenant cap the energy-aware admission
+    policy compares against the engine's projected marginal cost.
     """
 
     id: str
@@ -317,6 +322,8 @@ class Request:
     first_token_time: float | None = None
     finish_time: float | None = None
     slo_preempts: int = 0
+    energy_uj: float = 0.0
+    energy_cap_uj_per_token: float | None = None
 
     def __post_init__(self):
         self.prompt = tuple(int(t) for t in self.prompt)
@@ -394,7 +401,10 @@ class ContinuousBatchingEngine:
                  chaos=None,
                  journal_horizon: int | None = None,
                  mesh: Mesh | None = None,
-                 tp_axis: str = "model"):
+                 tp_axis: str = "model",
+                 metered: bool = True,
+                 operating_point: str = "max",
+                 gate_idle_banks: bool = True):
         from repro.core.platform import Platform, XHeepConfig
 
         if slots < 1:
@@ -557,6 +567,18 @@ class ContinuousBatchingEngine:
         # being "transient corruption" and raises (a real divergence bug
         # would otherwise replay forever)
         self.max_replays = 16
+        # energy meter: purely observational joule accounting over the
+        # calibrated HEEPocrates domain model. It reads launch shapes and
+        # page holdings after the fact and never touches tokens, PRNG
+        # state, or admission order — metered outputs are bit-identical
+        # to metered=False (the property suite holds the engine to that)
+        if metered:
+            from repro.serve.energy_meter import EnergyMeter
+
+            self._meter: EnergyMeter | None = EnergyMeter(
+                point=operating_point, gate_idle_banks=gate_idle_banks)
+        else:
+            self._meter = None
 
         if self.paged:
             self._pstep = paged_step_fn(cfg, self._window, mesh=mesh,
@@ -759,6 +781,9 @@ class ContinuousBatchingEngine:
             # quarantine left by a preemption's pending-flush: recover
             # before dispatch — the faulted slot's next_token is stale
             self._recover_faulted()
+        if self._meter is not None:
+            residents, idle_banks = self._meter_residents()
+            self._meter.tick(self.clock(), residents, idle_banks)
         self._admit()
         if self.active == 0:
             if self._pending is not None:
@@ -829,6 +854,11 @@ class ContinuousBatchingEngine:
 
         nxt = self._launch(toks, counts, feedback, emit)
         meta = _StepMeta([], [])
+        if self._meter is not None:
+            occupied = {self._slot_bank[i]
+                        for i, s in enumerate(self.slots) if s is not None}
+            launch_idle_banks = len(set(self._slot_bank)) - len(occupied)
+            charges = []
         for i, slot in enumerate(self.slots):
             if slot is None:
                 continue
@@ -836,6 +866,10 @@ class ContinuousBatchingEngine:
             was_prefilling = slot.prefilling
             if was_prefilling and c == 0:
                 continue                   # stalled this step
+            if self._meter is not None:
+                charges.append((slot.request,
+                                "prefill" if was_prefilling else "decode",
+                                c, self._page_share(slot)))
             slot.fed += c
             if self.paged:
                 self._recycle_dead(slot)   # window crossed: free dead blocks
@@ -857,6 +891,8 @@ class ContinuousBatchingEngine:
                 # in-flight computation — the token value lands at retire
                 meta.finished.append(slot)
                 self._evict(i)
+        if self._meter is not None:
+            self._meter.charge_step(charges, launch_idle_banks)
         return meta, nxt
 
     def _launch(self, toks, counts, feedback, emit):
@@ -1229,6 +1265,46 @@ class ContinuousBatchingEngine:
                 load[self._slot_bank[i]] += 1
         return load
 
+    # -- energy metering ------------------------------------------------------
+
+    def _page_share(self, slot: _Slot) -> float:
+        """Refcount-weighted KV pages this slot holds: shared-prefix pool
+        pages split their holding energy 1/refcount across local holders;
+        lane-backend slots count their pinned snapshot pages at weight 1.
+        Residual shares (table residency, other engines' pins) stay
+        uncharged — modeled as gated-off, never double-charged."""
+        if self.paged and slot.pages_by_block:
+            refs = self._pool.refcounts()
+            return sum(1.0 / max(refs.get(idx, 1), 1)
+                       for idx in slot.pages_by_block.values())
+        return float(len(slot.page_keys))
+
+    def _meter_residents(self):
+        """(residents, idle_banks) for the meter's clock tick: every
+        occupied slot with its bank-leak weight (a bank shared by k live
+        slots splits its retention leakage k ways) and page share, plus
+        how many of the engine's banks host no live slot."""
+        load = self._bank_load
+        residents = []
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            bank_weight = 1.0 / load[self._slot_bank[i]]
+            residents.append((slot.request, bank_weight,
+                              self._page_share(slot)))
+        idle_banks = sum(1 for n in load.values() if n == 0)
+        return residents, idle_banks
+
+    def set_operating_point(self, name: str) -> None:
+        """Move the engine's energy meter to a named DVFS point (see
+        :data:`repro.core.energy.OPERATING_POINTS`). Accounting only:
+        the throttled engine's tokens stay bit-identical — only the
+        joules-per-token bookkeeping changes."""
+        if self._meter is None:
+            raise ValueError("engine built with metered=False has no "
+                             "operating point to set")
+        self._meter.set_point(name)
+
     # -- preemption -----------------------------------------------------------
 
     def preempt(self) -> list[Request]:
@@ -1373,6 +1449,8 @@ class ContinuousBatchingEngine:
             "active": self.active,
             "journal": self.journal.size(),
         }
+        if self._meter is not None:
+            out["energy"] = self._meter.stats()
         if self.pages is not None:
             out["pages"] = dict(self.pages.stats,
                                 resident=self.pages.resident,

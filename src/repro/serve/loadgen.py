@@ -70,6 +70,10 @@ class TenantSpec:
     per-request ``seed`` drawn from the trace's mix RNG — deterministic
     per trace seed, distinct per request, and drawn *only* for sampling
     tenants so purely greedy traces stay bit-identical to PR 6.
+    ``energy_cap_uj_per_token`` (optional) rides on every generated
+    request as ``Request.energy_cap_uj_per_token`` — the energy-aware
+    admission policy sheds the tenant's traffic when the target engine's
+    projected marginal joules/token exceeds it.
     """
 
     engine: str
@@ -81,10 +85,14 @@ class TenantSpec:
     slo: SLO | None = None
     vocab: int = 240
     sampling: SamplingParams | None = None
+    energy_cap_uj_per_token: float | None = None
 
     def __post_init__(self):
         if self.share <= 0:
             raise ValueError("tenant share must be positive")
+        if (self.energy_cap_uj_per_token is not None
+                and self.energy_cap_uj_per_token <= 0):
+            raise ValueError("energy_cap_uj_per_token must be positive")
         for name, (lo, hi) in (("prompt_len", self.prompt_len),
                                ("new_tokens", self.new_tokens)):
             if lo < 1 or hi < lo:
@@ -214,5 +222,6 @@ def open_loop_trace(tenants: Sequence[TenantSpec], *, n_requests: int,
                                            seed=rng.getrandbits(31))
         req = Request(id=f"{spec.engine}-{i}",
                       prompt=list(prefix) + tail,
-                      max_new_tokens=ntok, slo=spec.slo, sampling=sampling)
+                      max_new_tokens=ntok, slo=spec.slo, sampling=sampling,
+                      energy_cap_uj_per_token=spec.energy_cap_uj_per_token)
         yield Arrival(t_arr, req, spec.engine)

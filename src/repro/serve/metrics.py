@@ -140,6 +140,7 @@ class ServeMetrics:
     def __init__(self):
         self.ttfts: list[float] = []
         self.tpots: list[float] = []
+        self.energies: list[float] = []       # per-request attributed µJ
         self.good_tokens = 0
         self.total_tokens = 0
         self.slo_met = 0
@@ -148,9 +149,12 @@ class ServeMetrics:
     def observe(self, request) -> None:
         """Record one finished request (its ``arrival_time`` /
         ``first_token_time`` / ``finish_time`` stamps must be set by the
-        engine)."""
+        engine). A metered engine's ``energy_uj`` attribution is picked
+        up automatically; unmetered runs contribute zeros and the energy
+        summary fields stay absent."""
         self.ttfts.append(request_ttft(request))
         self.tpots.append(request_tpot(request))
+        self.energies.append(float(getattr(request, "energy_uj", 0.0)))
         n = len(request.tokens)
         self.total_tokens += n
         ok = met_slo(request)
@@ -179,7 +183,10 @@ class ServeMetrics:
         """One flat dict of the headline numbers: exact p50/p99 (and
         mean) TTFT, p50/p99 per-token latency, SLO attainment, and
         good/total token counts. Pass the run's simulated ``elapsed`` to
-        additionally get ``goodput``/``throughput`` rates."""
+        additionally get ``goodput``/``throughput`` rates. Metered runs
+        (any nonzero ``Request.energy_uj``) add per-request energy
+        percentiles plus ``uj_per_token`` / ``tokens_per_joule`` —
+        the serving rendition of the paper's Fig. 6 energy framing."""
         out = {
             "completed": self.count,
             "slo_requests": self.slo_total,
@@ -195,6 +202,16 @@ class ServeMetrics:
                 tpot_p50=percentile(self.tpots, 50),
                 tpot_p99=percentile(self.tpots, 99),
             )
+        total_uj = sum(self.energies)
+        if total_uj > 0:
+            out.update(
+                energy_uj_p50=percentile(self.energies, 50),
+                energy_uj_p99=percentile(self.energies, 99),
+                energy_uj_total=total_uj,
+            )
+            if self.total_tokens:
+                out["uj_per_token"] = total_uj / self.total_tokens
+                out["tokens_per_joule"] = self.total_tokens / (total_uj * 1e-6)
         if elapsed:
             out["goodput"] = self.good_tokens / elapsed
             out["throughput"] = self.total_tokens / elapsed

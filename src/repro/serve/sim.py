@@ -200,11 +200,20 @@ class SimReport:
     tokens_generated: int
     completed: list                   # requests, completion order
     rejected: int
+    energy_uj: float = 0.0            # metered platform energy, this run
 
     @property
     def throughput(self) -> float:
         """Generated tokens per unit of fake time."""
         return self.tokens_generated / self.elapsed if self.elapsed else 0.0
+
+    @property
+    def tokens_per_joule(self) -> float:
+        """Generated tokens per joule of metered platform energy
+        (``0.0`` for unmetered runs)."""
+        if self.energy_uj <= 0:
+            return 0.0
+        return self.tokens_generated / (self.energy_uj * 1e-6)
 
 
 class Simulator:
@@ -281,6 +290,7 @@ class Simulator:
         t0 = self.clock.t
         steps0, tokens0 = eng.steps, eng.tokens_generated
         done0, rejected0 = len(eng.completed), eng.rejected
+        energy0 = eng._meter.total_uj if eng._meter is not None else 0.0
         for _ in range(max_steps):
             self._deliver_due()
             if eng.busy:
@@ -294,10 +304,13 @@ class Simulator:
             raise RuntimeError(f"simulation did not drain in {max_steps} steps")
         if getattr(eng, "async_dispatch", False):
             self.clock.advance_to(self._device_free)   # drain the pipeline
+        energy = (eng._meter.total_uj - energy0
+                  if eng._meter is not None else 0.0)
         return SimReport(elapsed=self.clock.t - t0, steps=eng.steps - steps0,
                          tokens_generated=eng.tokens_generated - tokens0,
                          completed=list(eng.completed[done0:]),
-                         rejected=eng.rejected - rejected0)
+                         rejected=eng.rejected - rejected0,
+                         energy_uj=energy)
 
 
 @dataclasses.dataclass
@@ -310,11 +323,20 @@ class ClusterSimReport:
     completed: dict                   # engine name -> requests, finish order
     rejected: int                     # summed engine backpressure rejections
     shed: int = 0                     # summed SLO-busted heads dropped
+    energy_uj: float = 0.0            # summed metered energy, this run
 
     @property
     def throughput(self) -> float:
         """Aggregate generated tokens per unit of fake time."""
         return self.tokens_generated / self.elapsed if self.elapsed else 0.0
+
+    @property
+    def tokens_per_joule(self) -> float:
+        """Aggregate generated tokens per joule of metered energy
+        (``0.0`` for unmetered runs)."""
+        if self.energy_uj <= 0:
+            return 0.0
+        return self.tokens_generated / (self.energy_uj * 1e-6)
 
 
 class ClusterSimulator:
@@ -370,6 +392,10 @@ class ClusterSimulator:
         done0 = {n: len(e.completed) for n, e in cl.engines.items()}
         rejected0 = {n: e.rejected for n, e in cl.engines.items()}
         shed0 = {n: e.shed for n, e in cl.engines.items()}
+        # meters survive crash rebuilds (the cluster carries them over),
+        # so per-name snapshots stay valid across mid-run engine swaps
+        energy0 = {n: e._meter.total_uj for n, e in cl.engines.items()
+                   if e._meter is not None}
         # per-engine device pipelines (device-busy-until timestamps)
         dev_free = {n: self.clock.t for n in cl.engines}
         steps_prev = {n: e.steps for n, e in cl.engines.items()}
@@ -418,4 +444,7 @@ class ClusterSimulator:
                        for n, e in cl.engines.items()},
             rejected=sum(e.rejected - rejected0[n]
                          for n, e in cl.engines.items()),
-            shed=sum(e.shed - shed0[n] for n, e in cl.engines.items()))
+            shed=sum(e.shed - shed0[n] for n, e in cl.engines.items()),
+            energy_uj=sum(e._meter.total_uj - energy0.get(n, 0.0)
+                          for n, e in cl.engines.items()
+                          if e._meter is not None))

@@ -220,10 +220,15 @@ def test_impossible_budget_raises_instead_of_spinning():
 
 
 def test_power_budget_validation():
-    with pytest.raises(ValueError, match="max_awake_banks or budget_uw"):
+    with pytest.raises(ValueError,
+                       match="max_awake_banks, budget_uw, or max_uj"):
         PowerBudget()
     with pytest.raises(ValueError, match=">= 1"):
         PowerBudget(max_awake_banks=0)
+    with pytest.raises(ValueError, match="max_uj_per_token"):
+        PowerBudget(max_uj_per_token=0.0)
+    with pytest.raises(ValueError, match="unknown operating point"):
+        PowerBudget(max_awake_banks=1, throttle_point="turbo")
 
 
 def test_wrr_weight_paces_admissions_per_round():

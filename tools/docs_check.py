@@ -26,9 +26,10 @@ Checks, failing the build with a listing of every violation:
      integer leaves of the JSON;
    * attainment percentages (``68.2%``) on lines mentioning attainment
      must equal a fractional leaf of the JSON scaled to percent, and
-     decimal figures on lines mentioning TTFT or goodput (``98.0``,
-     ``2.62``) must equal a leaf rounded to the quoted precision — the
-     open-loop SLO numbers stay as fresh as the speedups.
+     decimal figures on lines mentioning TTFT, goodput, or joules
+     (``98.0``, ``2.62``) must equal a leaf rounded to the quoted
+     precision — the open-loop SLO and tokens/joule numbers stay as
+     fresh as the speedups.
 
    The numeric sweep walks every leaf of the JSON generically, so new
    bench sections (e.g. the ``sampling`` determinism report) are covered
@@ -53,7 +54,8 @@ _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _EXTERNAL = ("http://", "https://", "mailto:")
 
 DOC_MODULES = (
-    "repro.serve.chaos", "repro.serve.cluster", "repro.serve.engine",
+    "repro.serve.chaos", "repro.serve.cluster", "repro.serve.energy_meter",
+    "repro.serve.engine",
     "repro.serve.loadgen", "repro.serve.metrics", "repro.serve.paged",
     "repro.serve.pages", "repro.serve.sampling", "repro.serve.sim",
     "repro.kernels.paged_attention.kernel",
@@ -173,14 +175,14 @@ def check_bench_numbers() -> list[str]:
                             f"{rel}:{lineno}: attainment {q}% not in "
                             f"BENCH_serve.json (stale number? run `make "
                             f"bench-json`)")
-            if "ttft" in low or "goodput" in low:
+            if "ttft" in low or "goodput" in low or "joule" in low:
                 for q in _DEC.findall(line):
                     nd = len(q.split(".")[1])
                     if float(q) not in {round(v, nd) for v in leaves}:
                         errors.append(
-                            f"{rel}:{lineno}: TTFT/goodput figure {q} not "
-                            f"in BENCH_serve.json (stale number? run `make "
-                            f"bench-json`)")
+                            f"{rel}:{lineno}: TTFT/goodput/joule figure "
+                            f"{q} not in BENCH_serve.json (stale number? "
+                            f"run `make bench-json`)")
 
     import bench_table
 
